@@ -1,0 +1,32 @@
+"""Shared benchmark helpers: timing + the synthetic stand-ins for the paper's
+datasets (offline container: MNIST/CIFAR10/WikiText are replaced by
+structurally-equivalent synthetic data; see DESIGN.md §8)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+class ClsDataset:
+    def __init__(self, x, y):
+        self.x, self.y = x, y
+
+    def __len__(self):
+        return len(self.x)
+
+    def batch(self, idx):
+        return {"x": self.x[idx], "y": self.y[idx]}

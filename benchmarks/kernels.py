@@ -1,0 +1,45 @@
+"""Kernel microbenches (interpret mode on CPU — structural numbers, not TPU
+wall time; the derived column reports modeled VMEM working-set bytes).
+
+CSV rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.kernels.ops import balance_scan, balance_scan_ref, gla_scan_ref
+
+
+def main(argv=None):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    for (m, k) in [(8, 4096), (16, 16384), (16, 65536)]:
+        g = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        s0 = jnp.zeros((k,), jnp.float32)
+        us_k = time_fn(lambda: balance_scan(s0, g, interpret=True), iters=5)
+        ref_j = jax.jit(balance_scan_ref)
+        us_r = time_fn(lambda: ref_j(s0, g), iters=5)
+        vmem = (8 * k + k) * 4
+        rows.append((f"balance_pallas_m{m}_k{k}", us_k, f"vmem_bytes={vmem}"))
+        rows.append((f"balance_xla_ref_m{m}_k{k}", us_r, "oracle"))
+
+    B, H, T, DK, DV = 1, 4, 512, 64, 64
+    q = jnp.asarray(rng.normal(size=(B, H, T, DK)), jnp.float32)
+    k_ = jnp.asarray(rng.normal(size=(B, H, T, DK)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, T, DV)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 1, size=(B, H, T, DK)), jnp.float32)
+    gla_j = jax.jit(gla_scan_ref)
+    us = time_fn(lambda: gla_j(q, k_, v, w), iters=5)
+    rows.append((f"gla_xla_B{B}H{H}T{T}", us, f"state_bytes={DK*DV*4}"))
+
+    print("name,us_per_call,derived")
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+
+
+if __name__ == "__main__":
+    main()

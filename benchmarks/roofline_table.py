@@ -1,0 +1,58 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(d):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.2f}" if s is not None else "-"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="singlepod", choices=["singlepod", "multipod"])
+    args = ap.parse_args()
+    recs = [r for r in load(args.dir)
+            if (args.mesh == "multipod") == ("2x" in r.get("mesh", ""))
+            or r["status"] == "skip"]
+    # dedupe skips (written for both meshes)
+    seen = set()
+    rows = []
+    for r in recs:
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        rows.append(r)
+
+    print(f"| arch | shape | status | mem/dev GiB | compute ms | memory ms "
+          f"| collective ms | dominant | useful |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['status']}"
+                  f" {r.get('reason','')[:40]} | - | - | - | - | - | - |")
+            continue
+        mem = sum(r.get(k) or 0 for k in ("mem_args", "mem_temp", "mem_output"))
+        print(f"| {r['arch']} | {r['shape']} | ok | {mem/2**30:.2f} "
+              f"| {fmt_ms(r['compute_s'])} | {fmt_ms(r['memory_s'])} "
+              f"| {fmt_ms(r['collective_s'])} | {r['dominant']} "
+              f"| {r['useful_ratio']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Sections:
+  herding_bound       Fig. 1b / Fig. 4 (balancers, repeated reordering)
+  convergence         Fig. 2a (GraB vs RR/SO/FlipFlop/Greedy)
+  ablation            Fig. 3 (1-step GraB / retrain-from-GraB)
+  rate_scaling        Table 1 (n-dependence of the rate)
+  memory_table        §1 memory claim (O(nd) vs O(d))
+  kernels             Pallas kernel microbenches (``name,us_per_call,derived``)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (ablation_fixed_order, convergence, herding_bound,
+                        kernels, memory_table, rate_scaling)
+
+SECTIONS = [
+    ("herding_bound", herding_bound.main),
+    ("convergence", convergence.main),
+    ("ablation", ablation_fixed_order.main),
+    ("rate_scaling", rate_scaling.main),
+    ("memory_table", memory_table.main),
+    ("kernels", kernels.main),
+]
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    for name, fn in SECTIONS:
+        if fast and name in ("rate_scaling", "ablation"):
+            continue
+        print(f"\n### {name}")
+        t0 = time.time()
+        fn()
+        print(f"### {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: GraB vs Random Reshuffling on a convex task, in ~30 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains the same logistic-regression model twice — once with RR, once with
+GraB — using identical hyperparameters (the paper's "in-place improvement"
+setting), then prints per-epoch losses and the O(d) vs O(nd) memory ledger.
+"""
+import numpy as np
+import jax
+
+from repro.data.synthetic import synthetic_classification
+from repro.models.paper_models import logreg_init, logreg_loss
+from repro.optim import constant, sgdm
+from repro.train import LoopConfig, run_training
+
+
+class ClsDataset:
+    def __init__(self, x, y):
+        self.x, self.y = x, y
+
+    def __len__(self):
+        return len(self.x)
+
+    def batch(self, idx):
+        return {"x": self.x[idx], "y": self.y[idx]}
+
+
+def main():
+    n, d, micro = 256, 64, 4
+    x, y = synthetic_classification(n, d, seed=1, noise=2.0)
+    ds = ClsDataset(x, y)
+    loss_fn = lambda p, mb: (logreg_loss(p, mb), {})
+
+    results = {}
+    for ordering in ("rr", "grab"):
+        params = logreg_init(jax.random.PRNGKey(0), d, 10)
+        cfg = LoopConfig(epochs=12, n_micro=8, ordering=ordering, log_every=0)
+        _, hist = run_training(loss_fn, params, sgdm(0.9), constant(0.05),
+                               ds, micro, cfg)
+        per_epoch = {}
+        for h in hist:
+            per_epoch.setdefault(h["epoch"], []).append(h["loss"])
+        results[ordering] = [float(np.mean(v))
+                             for _, v in sorted(per_epoch.items())]
+
+    print(f"\n{'epoch':>5} {'RR loss':>12} {'GraB loss':>12}")
+    for ep, (a, b) in enumerate(zip(results["rr"], results["grab"])):
+        print(f"{ep:>5} {a:>12.5f} {b:>12.5f}")
+
+    model_d = d * 10 + 10
+    n_units = n // micro
+    print(f"\nmemory: GraB state = 3 x d = {3 * model_d * 4:,} bytes; "
+          f"greedy ordering would store n x d = {n_units * model_d * 4:,} bytes "
+          f"({n_units * model_d / (3 * model_d):.0f}x more)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""granite-moe-3b-a800m [hf:ibm-granite; hf] — MoE, 40 experts top-8 per the
+assignment line (d_ff=512 per expert), GQA kv=8."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="granite-moe-3b-a800m", n_layers=32, d_model=1536, n_heads=24,
+    n_kv_heads=8, head_dim=64, d_ff=512, vocab=49155, block="moe",
+    moe_experts=40, moe_topk=8, moe_group=512,
+)
+
+SMOKE = FULL.with_(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                   head_dim=16, d_ff=64, vocab=512, moe_experts=4, moe_topk=2,
+                   moe_group=16, moe_capacity=2.0, param_dtype="float32")

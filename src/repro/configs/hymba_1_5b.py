@@ -1,0 +1,13 @@
+"""hymba-1.5b [arXiv:2411.13676; hf] — hybrid: parallel attention + Mamba
+heads in every block, GQA kv=5, sliding-window attention, ssm_state=16."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hymba-1.5b", n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    head_dim=64, d_ff=5504, vocab=32001, block="hymba",
+    ssm_state=16, ssm_heads=25, sliding_window=1024,
+)
+
+SMOKE = FULL.with_(n_layers=2, d_model=100, n_heads=5, n_kv_heads=1,
+                   head_dim=20, d_ff=128, vocab=512, ssm_heads=5,
+                   sliding_window=16, param_dtype="float32")

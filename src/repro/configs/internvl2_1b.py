@@ -1,0 +1,14 @@
+"""internvl2-1b [arXiv:2404.16821; hf] — VLM: InternViT frontend (STUB per the
+assignment; `input_specs` provides precomputed patch embeddings as a 256-token
+prefix) + Qwen2-0.5B-like LM backbone (GQA kv=2)."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="internvl2-1b", n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    head_dim=64, d_ff=4864, vocab=151655, block="dense", qkv_bias=True,
+    prefix_embed_len=256, rope_theta=1e6,
+)
+
+SMOKE = FULL.with_(n_layers=2, d_model=64, n_heads=2, n_kv_heads=1,
+                   head_dim=32, d_ff=128, vocab=512, prefix_embed_len=8,
+                   param_dtype="float32")

@@ -1,0 +1,11 @@
+"""minicpm-2b [arXiv:2404.06395; hf] — dense llama-like, MHA (kv=36), WSD
+schedule (see repro.optim.schedules.wsd)."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="minicpm-2b", n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+    head_dim=64, d_ff=5760, vocab=122753, block="dense",
+)
+
+SMOKE = FULL.with_(n_layers=2, d_model=96, n_heads=4, n_kv_heads=4,
+                   head_dim=24, d_ff=192, vocab=512, param_dtype="float32")

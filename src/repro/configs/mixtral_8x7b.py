@@ -1,0 +1,13 @@
+"""mixtral-8x7b [arXiv:2401.04088; hf] — MoE 8 experts top-2, GQA kv=8,
+sliding-window attention (4096)."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mixtral-8x7b", n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab=32000, block="moe",
+    moe_experts=8, moe_topk=2, moe_group=512, sliding_window=4096,
+)
+
+SMOKE = FULL.with_(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                   head_dim=32, d_ff=256, vocab=512, moe_experts=4, moe_topk=2,
+                   moe_group=16, sliding_window=16, moe_capacity=2.0, param_dtype="float32")

@@ -1,0 +1,10 @@
+"""phi3-mini-3.8b [arXiv:2404.14219; unverified] — dense, RoPE SwiGLU, MHA."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="phi3-mini-3.8b", n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+    head_dim=96, d_ff=8192, vocab=32064, block="dense",
+)
+
+SMOKE = FULL.with_(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+                   head_dim=32, d_ff=256, vocab=512, param_dtype="float32")

@@ -1,0 +1,11 @@
+"""phi4-mini-3.8b [arXiv:2412.08905; hf] — dense, GQA kv=8, 200k vocab
+(stresses embedding sharding)."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="phi4-mini-3.8b", n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+    head_dim=128, d_ff=8192, vocab=200064, block="dense",
+)
+
+SMOKE = FULL.with_(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                   head_dim=32, d_ff=256, vocab=512, param_dtype="float32")

@@ -1,0 +1,11 @@
+"""qwen2-7b [arXiv:2407.10671; hf] — dense, GQA kv=4, QKV bias."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-7b", n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    head_dim=128, d_ff=18944, vocab=152064, block="dense", qkv_bias=True,
+    rope_theta=1e6,
+)
+
+SMOKE = FULL.with_(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                   head_dim=32, d_ff=256, vocab=512, param_dtype="float32")

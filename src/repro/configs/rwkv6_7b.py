@@ -1,0 +1,12 @@
+"""rwkv6-7b "Finch" [arXiv:2404.05892; hf] — attention-free, data-dependent
+decay; WKV recurrence runs on the chunked GLA kernel."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="rwkv6-7b", n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64,
+    head_dim=64, d_ff=14336, vocab=65536, block="rwkv6", ssm_heads=64,
+)
+
+SMOKE = FULL.with_(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                   head_dim=32, d_ff=128, vocab=512, ssm_heads=2,
+                   param_dtype="float32")

@@ -1,0 +1,13 @@
+"""whisper-tiny [arXiv:2212.04356; unverified] — encoder-decoder audio model;
+conv frontend STUBBED: `input_specs` provides precomputed frame embeddings."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-tiny", n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    head_dim=64, d_ff=1536, vocab=51865, block="dense", enc_dec=True,
+    enc_layers=4, enc_frames=1500, norm="ln", act="gelu", tie_embeddings=True,
+)
+
+SMOKE = FULL.with_(n_layers=2, enc_layers=2, d_model=64, n_heads=2,
+                   n_kv_heads=2, head_dim=32, d_ff=128, vocab=512,
+                   enc_frames=16, param_dtype="float32")

@@ -1,0 +1,37 @@
+# GraB — the paper's primary contribution: online gradient balancing for
+# provably-better-than-RR data permutations, plus the offline herding
+# framework and every ordering baseline the paper compares against.
+from repro.core.balance import (
+    BalanceState,
+    alweiss_sign,
+    balance_sequence,
+    balance_step,
+    deterministic_sign,
+    init_balance_state,
+    tree_balance_step,
+)
+from repro.core.grab import (
+    GrabConfig,
+    GrabState,
+    Sketch,
+    grab_epoch_end,
+    grab_step,
+    init_grab_state,
+    make_sketch,
+)
+from repro.core.herding import (
+    adversarial_vectors,
+    greedy_order,
+    herd_offline,
+    herding_objective,
+    reorder_from_signs,
+)
+from repro.core.orderings import (
+    FixedOrder,
+    FlipFlop,
+    GrabOrder,
+    OrderPolicy,
+    RandomReshuffling,
+    ShuffleOnce,
+    make_policy,
+)

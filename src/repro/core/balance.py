@@ -1,0 +1,101 @@
+"""Sign balancers — the inner loop of GraB.
+
+Two balancing subroutines from the paper:
+
+* :func:`deterministic_sign` — Algorithm 5, "balancing without normalization":
+  ``eps = +1 if ||s + z|| < ||s - z|| else -1``. Because
+  ``||s+z||^2 - ||s-z||^2 = 4<s, z>``, this reduces to ``eps = +1 iff <s,z> <= 0``
+  (ties resolve to +1), which is what we compute — one inner product instead of
+  two norms. This is the balancer the paper uses in all experiments.
+
+* :func:`alweiss_sign` — Algorithm 6, the self-balancing walk of
+  Alweiss, Liu & Sawhney (2021): ``eps = +1`` with probability
+  ``1/2 - <s,z>/(2c)``. Guarantees ``max_t ||sum eps_j z_j||_inf <= c``
+  with probability 1-δ for ``c = 30 log(nd/δ)`` and normalized inputs.
+  We implement the "restart on failure" variant as a soft clip so it stays
+  jit-safe: probabilities are clamped to [0, 1].
+
+Both operate on *vectors* here; :mod:`repro.core.grab` lifts them to pytrees
+(sharded gradients) where the inner product becomes per-shard partials + psum.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_dot
+
+
+def deterministic_sign(dot_sz: jax.Array) -> jax.Array:
+    """Algorithm 5 given the precomputed inner product <s, z>."""
+    return jnp.where(dot_sz <= 0, jnp.int32(1), jnp.int32(-1))
+
+
+def alweiss_sign(dot_sz: jax.Array, c: jax.Array, key: jax.Array) -> jax.Array:
+    """Algorithm 6 given <s, z>, the bound hyperparameter c and a PRNG key."""
+    p_plus = jnp.clip(0.5 - dot_sz / (2.0 * c), 0.0, 1.0)
+    u = jax.random.uniform(key, shape=dot_sz.shape)
+    return jnp.where(u < p_plus, jnp.int32(1), jnp.int32(-1))
+
+
+class BalanceState(NamedTuple):
+    """Running signed sum for vector balancing (vector form)."""
+    s: jax.Array           # running signed sum, f32
+    key: jax.Array         # PRNG key (used only by the alweiss balancer)
+
+
+def init_balance_state(dim: int, key: jax.Array | None = None) -> BalanceState:
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return BalanceState(s=jnp.zeros((dim,), jnp.float32), key=key)
+
+
+def balance_step(state: BalanceState, z: jax.Array, *, kind: str = "deterministic",
+                 c: float = 30.0):
+    """Assign a sign to ``z`` and update the running sum. Returns (state, eps)."""
+    z = z.astype(jnp.float32)
+    dot = jnp.vdot(state.s, z)
+    if kind == "deterministic":
+        eps = deterministic_sign(dot)
+        key = state.key
+    elif kind == "alweiss":
+        key, sub = jax.random.split(state.key)
+        eps = alweiss_sign(dot, jnp.float32(c), sub)
+    else:
+        raise ValueError(f"unknown balancer kind: {kind!r}")
+    return BalanceState(s=state.s + eps.astype(jnp.float32) * z, key=key), eps
+
+
+def balance_sequence(zs: jax.Array, *, kind: str = "deterministic", c: float = 30.0,
+                     key: jax.Array | None = None):
+    """Balance a [n, d] batch of vectors sequentially. Returns (signs [n], s)."""
+    state = init_balance_state(zs.shape[-1], key)
+
+    def step(st, z):
+        st, eps = balance_step(st, z, kind=kind, c=c)
+        return st, eps
+
+    state, signs = jax.lax.scan(step, state, zs)
+    return signs, state.s
+
+
+def tree_balance_step(s_tree, z_tree, *, kind: str = "deterministic",
+                      c: float = 30.0, key: jax.Array | None = None):
+    """Pytree-mode balance step: s_tree and z_tree share structure/sharding.
+
+    Returns (new_s_tree, eps). Under pjit the tree_dot lowers to per-shard
+    partial dots + a scalar all-reduce — O(1) communication.
+    """
+    dot = tree_dot(s_tree, z_tree)
+    if kind == "deterministic":
+        eps = deterministic_sign(dot)
+    elif kind == "alweiss":
+        assert key is not None, "alweiss balancer needs a PRNG key"
+        eps = alweiss_sign(dot, jnp.float32(c), key)
+    else:
+        raise ValueError(f"unknown balancer kind: {kind!r}")
+    epsf = eps.astype(jnp.float32)
+    new_s = jax.tree.map(lambda si, zi: si + epsf * zi.astype(jnp.float32), s_tree, z_tree)
+    return new_s, eps

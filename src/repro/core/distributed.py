@@ -1,0 +1,57 @@
+"""Distributed GraB variants (beyond-paper, CD-GraB-flavored).
+
+Two composable strategies for data-parallel meshes:
+
+* :func:`local_rank_signs` — each data-parallel shard balances its *own*
+  microbatch-gradient stream against a *local* running sum. Zero extra
+  communication; each DP group maintains its own permutation over its data
+  shard. Implemented with ``shard_map`` over the data axis so the per-rank
+  partial gradients never leave the shard.
+
+* global sketch balancing — the default in :mod:`repro.train.step`: the
+  globally psum'd microbatch gradient (which pjit produces anyway) is
+  balanced against one global running sum; in sketch mode the per-step state
+  traffic is O(k). One sign per global microbatch; the host permutes global
+  microbatch ids. This is the pod-scale default because it piggybacks
+  entirely on collectives the training step already performs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def local_rank_signs(local_sums: jax.Array, local_zs: jax.Array,
+                     mesh, data_axis: str = "data"):
+    """Per-rank deterministic balancing under shard_map.
+
+    ``local_sums``: [dp, k] running sums (sharded over data axis).
+    ``local_zs``:   [dp, k] this step's sketched local gradients.
+    Returns (new_sums [dp, k], signs [dp]).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def one_rank(s, z):
+        # s, z: [1, k] local shard
+        dot = jnp.vdot(s, z)
+        eps = jnp.where(dot <= 0, jnp.int32(1), jnp.int32(-1))
+        return s + eps.astype(jnp.float32) * z, eps[None]
+
+    fn = shard_map(one_rank, mesh=mesh,
+                   in_specs=(P(data_axis, None), P(data_axis, None)),
+                   out_specs=(P(data_axis, None), P(data_axis)))
+    return fn(local_sums, local_zs)
+
+
+def pairwise_difference(zs: jax.Array) -> jax.Array:
+    """Pair-balancing transform (CD-GraB's 'pair balance'): balance differences
+    z_{2i} - z_{2i+1}, which are mean-free by construction — removes the stale-
+    mean estimate entirely. ``zs``: [2m, k] -> [m, k] differences."""
+    assert zs.shape[0] % 2 == 0, "pair balancing needs an even number of vectors"
+    return zs[0::2] - zs[1::2]
+
+
+def signs_from_pair_signs(pair_signs: jax.Array) -> jax.Array:
+    """Expand per-pair signs to per-vector signs: pair sign e gives (+e, -e)."""
+    return jnp.stack([pair_signs, -pair_signs], axis=1).reshape(-1)

@@ -1,0 +1,218 @@
+"""GraB — SGD with Online Gradient Balancing (Algorithm 4), as a composable
+JAX module.
+
+Device side
+-----------
+:class:`GrabState` carries O(d) state (three gradient-shaped pytrees) and
+:func:`grab_step` implements lines 6-12 of Algorithm 4 for one stochastic
+gradient: center with the *stale mean* ``m_prev``, pick a sign with the
+balancer, update the running signed sum ``s`` and the fresh-mean accumulator
+``m_acc``. It is jit-safe and sharding-transparent: all three pytrees share
+the gradient's PartitionSpecs, so the balancing inner product lowers to
+per-shard partial dots + one scalar all-reduce.
+
+Sketch mode (beyond the paper) keeps ``s`` only for a fixed coordinate
+subsample of the gradient (``k`` entries), cutting balance state and the
+sequential-scan bandwidth from O(d) to O(k). The Pallas kernel in
+``repro.kernels.balance`` accelerates exactly this path.
+
+Host side
+---------
+The permutation itself lives on the host: :class:`EpochOrder` (in
+``repro.core.orderings``) collects the per-step signs and applies the
+Algorithm-3 two-pointer reorder at epoch end. Separating the two keeps the
+device step purely functional (checkpointable, reshardable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.balance import alweiss_sign, deterministic_sign, tree_balance_step
+from repro.utils.tree import tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class GrabConfig:
+    balancer: str = "deterministic"      # "deterministic" (Alg.5) | "alweiss" (Alg.6)
+    alweiss_c: float = 30.0
+    sketch_dim: int = 0                  # 0 = full pytree mode; >0 = sketch mode
+    # Pair balancing (CD-GraB flavor, beyond paper): balance the differences
+    # z_{2i} - z_{2i+1}, which are mean-free by construction — no stale-mean
+    # estimate, and the m_prev/m_acc pytrees become a single prev-grad
+    # buffer. The device emits the pair sign at odd steps; the host expands
+    # it to (+e, -e) per pair (see orderings.expand_pair_signs).
+    pair_balance: bool = False
+    seed: int = 0
+
+
+class GrabState(NamedTuple):
+    s: Any            # running signed sum (pytree, or [k] vector in sketch mode)
+    m_prev: Any       # stale mean from previous epoch (pytree)
+    m_acc: Any        # fresh mean accumulator (pytree)
+    t: jax.Array      # step within epoch
+    key: jax.Array    # PRNG (alweiss only)
+
+
+# ---------------------------------------------------------------------------
+# Sketch: fixed coordinate subsample of a pytree, precomputed per leaf.
+# ---------------------------------------------------------------------------
+
+class Sketch(NamedTuple):
+    """Per-leaf coordinate subsample (static).
+
+    Indices are stored *unraveled* (one int array per leaf dimension):
+    ``leaf[idx0, idx1, ...]`` is a plain gather that XLA partitions without
+    reshaping — a flat ``leaf.reshape(-1)[idx]`` forces full replication of
+    2D-sharded weights (measured +20 GiB/dev and 2x collectives on the
+    256-chip mesh)."""
+    leaf_idx: tuple          # tuple of tuples-of-int-arrays, one per leaf
+
+    def apply(self, tree) -> jax.Array:
+        leaves = jax.tree.leaves(tree)
+        parts = [leaf[idx].astype(jnp.float32)
+                 for leaf, idx in zip(leaves, self.leaf_idx)
+                 if idx is not None and idx[0].size]
+        return jnp.concatenate(parts)
+
+
+def make_sketch(tree, k: int, seed: int = 0) -> Sketch:
+    """Sample ~k coordinates, allocated to leaves proportionally to size."""
+    rng = np.random.default_rng(seed)
+    leaves = jax.tree.leaves(tree)
+    sizes = np.array([int(l.size) for l in leaves], dtype=np.int64)
+    total = sizes.sum()
+    alloc = np.maximum((sizes * k) // max(total, 1), 0)
+    # round-robin the remainder to the largest leaves
+    deficit = k - int(alloc.sum())
+    for i in np.argsort(-sizes)[: max(deficit, 0)]:
+        alloc[i] += 1
+    idxs = []
+    for leaf, size, a in zip(leaves, sizes, alloc):
+        a = int(min(a, size))
+        if not a:
+            idxs.append(None)
+            continue
+        flat = np.sort(rng.choice(size, size=a, replace=False))
+        nd = np.unravel_index(flat, leaf.shape)
+        idxs.append(tuple(jnp.asarray(i) for i in nd))
+    return Sketch(leaf_idx=tuple(idxs))
+
+
+# ---------------------------------------------------------------------------
+# State init / per-gradient step / epoch boundary
+# ---------------------------------------------------------------------------
+
+def init_grab_state(grad_template, cfg: GrabConfig) -> GrabState:
+    zeros = tree_zeros_like(grad_template, jnp.float32)
+    if cfg.sketch_dim > 0:
+        s = jnp.zeros((cfg.sketch_dim,), jnp.float32)
+    else:
+        s = zeros
+    return GrabState(s=s, m_prev=zeros, m_acc=zeros,
+                     t=jnp.int32(0), key=jax.random.PRNGKey(cfg.seed))
+
+
+def grab_step(state: GrabState, grad, n_per_epoch: int, cfg: GrabConfig,
+              sketch: Optional[Sketch] = None):
+    """One Algorithm-4 inner iteration. Returns (new_state, eps in {-1,+1};
+    pair mode returns eps=0 on even steps — the pair's sign arrives on the
+    odd step and the host expands it)."""
+    if cfg.pair_balance:
+        return _grab_step_pair(state, grad, cfg, sketch)
+    g32 = jax.tree.map(lambda x: x.astype(jnp.float32), grad)
+    centered = jax.tree.map(jnp.subtract, g32, state.m_prev)
+
+    key = state.key
+    if cfg.sketch_dim > 0:
+        assert sketch is not None, "sketch mode needs a Sketch"
+        z = sketch.apply(centered)
+        dot = jnp.vdot(state.s, z)
+        if cfg.balancer == "deterministic":
+            eps = deterministic_sign(dot)
+        else:
+            key, sub = jax.random.split(key)
+            eps = alweiss_sign(dot, jnp.float32(cfg.alweiss_c), sub)
+        new_s = state.s + eps.astype(jnp.float32) * z
+    else:
+        if cfg.balancer == "alweiss":
+            key, sub = jax.random.split(key)
+            new_s, eps = tree_balance_step(state.s, centered, kind="alweiss",
+                                           c=cfg.alweiss_c, key=sub)
+        else:
+            new_s, eps = tree_balance_step(state.s, centered)
+
+    m_acc = jax.tree.map(lambda a, g: a + g / n_per_epoch, state.m_acc, g32)
+    return GrabState(s=new_s, m_prev=state.m_prev, m_acc=m_acc,
+                     t=state.t + 1, key=key), eps
+
+
+def _grab_step_pair(state: GrabState, grad, cfg: GrabConfig,
+                    sketch: Optional[Sketch]):
+    """CD-GraB pair balancing: stash even-step grads in the m_acc buffer;
+    on odd steps balance the difference z = g_prev - g."""
+    g32 = jax.tree.map(lambda x: x.astype(jnp.float32), grad)
+    even = (state.t % 2) == 0
+
+    def stash(_):
+        return state._replace(m_acc=g32, t=state.t + 1), jnp.int32(0)
+
+    def balance(_):
+        diff = jax.tree.map(jnp.subtract, state.m_acc, g32)
+        key = state.key
+        if cfg.sketch_dim > 0:
+            assert sketch is not None
+            z = sketch.apply(diff)
+            dot = jnp.vdot(state.s, z)
+            if cfg.balancer == "deterministic":
+                eps = deterministic_sign(dot)
+            else:
+                key, sub = jax.random.split(key)
+                eps = alweiss_sign(dot, jnp.float32(cfg.alweiss_c), sub)
+            new_s = state.s + eps.astype(jnp.float32) * z
+        else:
+            if cfg.balancer == "alweiss":
+                key, sub = jax.random.split(state.key)
+                new_s, eps = tree_balance_step(state.s, diff, kind="alweiss",
+                                               c=cfg.alweiss_c, key=sub)
+            else:
+                new_s, eps = tree_balance_step(state.s, diff)
+        return state._replace(s=new_s, key=key, t=state.t + 1), eps
+
+    # both branches are cheap relative to the gradient computation; a
+    # select keeps this jit-friendly without lax.cond's branch closure cost
+    st_a, eps_a = stash(None)
+    st_b, eps_b = balance(None)
+    new_state = jax.tree.map(
+        lambda a, b: jnp.where(even, a, b) if getattr(a, "ndim", None) is not None
+        else a, st_a, st_b)
+    eps = jnp.where(even, eps_a, eps_b)
+    return new_state, eps
+
+
+def expand_pair_signs(signs: np.ndarray) -> np.ndarray:
+    """[..., 0, e1, 0, e2, ...] -> per-element signs [e1, -e1, e2, -e2, ...]."""
+    signs = np.asarray(signs).reshape(-1)
+    assert signs.shape[0] % 2 == 0
+    pair = signs[1::2]
+    out = np.empty_like(signs)
+    out[0::2] = pair
+    out[1::2] = -pair
+    return out
+
+
+def grab_epoch_end(state: GrabState, cfg: GrabConfig) -> GrabState:
+    """Promote the fresh mean to stale, reset the sum and accumulator."""
+    if cfg.sketch_dim > 0:
+        s = jnp.zeros_like(state.s)
+    else:
+        s = tree_zeros_like(state.s, jnp.float32)
+    m_prev = (tree_zeros_like(state.m_acc, jnp.float32) if cfg.pair_balance
+              else state.m_acc)
+    return GrabState(s=s, m_prev=m_prev,
+                     m_acc=tree_zeros_like(state.m_acc, jnp.float32),
+                     t=jnp.int32(0), key=state.key)

@@ -1,0 +1,110 @@
+"""Host-side ordering policies: GraB epoch manager + RR / SO / FlipFlop / fixed.
+
+Everything here is deterministic numpy on the host; the device only ever sees
+integer index arrays. That keeps ordering checkpointable and lets a restarted
+host rebuild its data stream from (seed, epoch, step, sigma) alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.herding import reorder_from_signs
+
+
+class OrderPolicy:
+    """Base: yields a permutation of [0, n) for each epoch."""
+
+    def __init__(self, n: int, seed: int = 0):
+        self.n = int(n)
+        self.seed = int(seed)
+
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        raise NotImplementedError
+
+    # GraB hook points (no-ops for static policies)
+    def record_signs(self, epoch: int, signs: np.ndarray) -> None:
+        pass
+
+    def state_dict(self) -> dict:
+        return {"n": self.n, "seed": self.seed}
+
+    def load_state_dict(self, d: dict) -> None:
+        pass
+
+
+class RandomReshuffling(OrderPolicy):
+    """RR: fresh uniform permutation every epoch (counter-based, stateless)."""
+
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, epoch))
+        return rng.permutation(self.n)
+
+
+class ShuffleOnce(OrderPolicy):
+    """SO: one random permutation, reused every epoch."""
+
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, 0))
+        return rng.permutation(self.n)
+
+
+class FlipFlop(OrderPolicy):
+    """FlipFlop [Rajput et al. 2021]: reshuffle on even epochs, reverse on odd."""
+
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, epoch // 2))
+        perm = rng.permutation(self.n)
+        return perm if epoch % 2 == 0 else perm[::-1].copy()
+
+
+class FixedOrder(OrderPolicy):
+    """A fixed permutation (for the paper's 1-step-GraB / retrain ablations)."""
+
+    def __init__(self, sigma: np.ndarray):
+        super().__init__(len(sigma))
+        self.sigma = np.asarray(sigma, dtype=np.int64)
+
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        return self.sigma
+
+
+class GrabOrder(OrderPolicy):
+    """GraB host side: sigma_{k+1} = Alg.3 reorder of sigma_k by this epoch's
+    signs (identical to the two-pointer construction in Algorithm 4).
+    Epoch 0 starts from a random permutation (matches the paper's init)."""
+
+    def __init__(self, n: int, seed: int = 0):
+        super().__init__(n, seed)
+        rng = np.random.default_rng((seed, 0))
+        self.sigma = rng.permutation(n)
+        self._signs: Optional[np.ndarray] = None
+
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        return self.sigma
+
+    def record_signs(self, epoch: int, signs: np.ndarray) -> None:
+        signs = np.asarray(signs).reshape(-1)
+        assert signs.shape[0] == self.n, (signs.shape, self.n)
+        self.sigma = reorder_from_signs(self.sigma, signs)
+
+    def state_dict(self) -> dict:
+        return {"n": self.n, "seed": self.seed, "sigma": self.sigma.copy()}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.sigma = np.asarray(d["sigma"], dtype=np.int64)
+
+
+def make_policy(name: str, n: int, seed: int = 0, **kw) -> OrderPolicy:
+    name = name.lower()
+    if name in ("rr", "random_reshuffling"):
+        return RandomReshuffling(n, seed)
+    if name in ("so", "shuffle_once"):
+        return ShuffleOnce(n, seed)
+    if name == "flipflop":
+        return FlipFlop(n, seed)
+    if name == "grab":
+        return GrabOrder(n, seed)
+    raise ValueError(f"unknown ordering policy {name!r}")

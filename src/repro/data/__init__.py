@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticTextDataset, synthetic_classification
+from repro.data.loader import PermutedLoader

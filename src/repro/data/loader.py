@@ -1,0 +1,72 @@
+"""Permutation-driven data loader.
+
+The contract that makes GraB work at scale:
+
+* the **ordering policy** (host, ``repro.core.orderings``) owns a permutation
+  over *global microbatch indices*;
+* the loader maps ``(epoch, step) -> microbatch indices -> example arrays``
+  as a pure function — no iterator state. A restarted or replacement host
+  reconstructs its stream from the checkpointed (sigma, epoch, step) triple;
+* per-host sharding is index arithmetic: host h of H loads rows
+  ``batch[h::H]`` of each global batch. No cross-host handshake (straggler-
+  and elasticity-friendly).
+
+Background prefetch keeps the device fed without blocking on example
+synthesis/IO (bounded queue, so a slow host degrades gracefully rather than
+OOMing).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.core.orderings import OrderPolicy
+
+
+class PermutedLoader:
+    def __init__(self, dataset, policy: OrderPolicy, micro_size: int,
+                 host_id: int = 0, n_hosts: int = 1, prefetch: int = 2):
+        assert len(dataset) % micro_size == 0, \
+            "dataset size must divide into microbatches"
+        self.ds = dataset
+        self.policy = policy
+        self.micro = micro_size
+        self.n_micro = len(dataset) // micro_size
+        assert self.policy.n == self.n_micro, \
+            f"policy orders {self.policy.n} units, loader has {self.n_micro}"
+        self.host_id, self.n_hosts = host_id, n_hosts
+        self.prefetch = prefetch
+
+    def micro_indices(self, epoch: int, step: int) -> np.ndarray:
+        """Example indices for global microbatch `step` of `epoch`."""
+        sigma = self.policy.epoch_order(epoch)
+        m = sigma[step]
+        return np.arange(m * self.micro, (m + 1) * self.micro)
+
+    def load_micro(self, epoch: int, step: int) -> dict:
+        idx = self.micro_indices(epoch, step)
+        local = idx[self.host_id::self.n_hosts]
+        return self.ds.batch(local)
+
+    def epoch(self, epoch: int, start_step: int = 0):
+        """Iterate (step, microbatch) with background prefetch."""
+        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        stop = object()
+
+        def producer():
+            try:
+                for s in range(start_step, self.n_micro):
+                    q.put((s, self.load_micro(epoch, s)))
+            finally:
+                q.put(stop)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        while True:
+            item = q.get()
+            if item is stop:
+                break
+            yield item

@@ -1,0 +1,53 @@
+"""Deterministic synthetic datasets.
+
+Offline container: no downloads. Two generators cover every experiment:
+
+* :class:`SyntheticTextDataset` — counter-based token corpus (Markov-ish
+  structure so the LM loss actually decreases); any example is recomputable
+  from (seed, index) alone, which is what makes the loader stateless and
+  straggler/restart-safe.
+* :func:`synthetic_classification` — linearly-separable-with-noise features
+  for the paper-scale convex experiments (logreg stands in for MNIST).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SyntheticTextDataset:
+    """n examples of seq_len tokens. Example i is a pure function of (seed, i)."""
+
+    def __init__(self, n: int, seq_len: int, vocab: int, seed: int = 0):
+        self.n, self.seq_len, self.vocab, self.seed = n, seq_len, vocab, seed
+        # A fixed random bigram transition table gives learnable structure.
+        rng = np.random.default_rng(seed)
+        self._next = rng.integers(0, vocab, size=(vocab, 4), dtype=np.int64)
+
+    def __len__(self):
+        return self.n
+
+    def example(self, i: int) -> dict:
+        rng = np.random.default_rng((self.seed, int(i)))
+        toks = np.empty(self.seq_len + 1, dtype=np.int32)
+        toks[0] = rng.integers(0, self.vocab)
+        branch = rng.integers(0, 4, size=self.seq_len)
+        noise = rng.random(self.seq_len) < 0.05
+        rand = rng.integers(0, self.vocab, size=self.seq_len)
+        for t in range(self.seq_len):
+            nxt = self._next[toks[t], branch[t]]
+            toks[t + 1] = rand[t] if noise[t] else nxt
+        return {"tokens": toks[:-1], "labels": toks[1:].astype(np.int32)}
+
+    def batch(self, idx: np.ndarray) -> dict:
+        exs = [self.example(int(i)) for i in idx]
+        return {k: np.stack([e[k] for e in exs]) for k in exs[0]}
+
+
+def synthetic_classification(n: int, dim: int, classes: int = 10, seed: int = 0,
+                             noise: float = 0.5):
+    """Features around class centroids + label noise. Returns (x, y) arrays."""
+    rng = np.random.default_rng(seed)
+    centroids = rng.normal(size=(classes, dim)).astype(np.float32)
+    y = rng.integers(0, classes, size=n)
+    x = centroids[y] + noise * rng.normal(size=(n, dim)).astype(np.float32)
+    return x.astype(np.float32), y.astype(np.int32)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused sequential balance scan (GraB's inner loop).
+
+The hot loop of GraB in sketch mode is, per microbatch t:
+
+    dot  = <s, z_t>            (reduction over k)
+    eps  = +1 if dot <= 0 else -1
+    s   += eps * z_t           (axpy over k)
+
+XLA lowers a ``lax.scan`` over this to m separate reduce/select/add HLO ops,
+each of which round-trips ``s`` through HBM. This kernel keeps ``s`` resident
+in VMEM across the whole scan and fuses the three ops per step:
+
+* grid = (m // TILE_M,), sequential on TPU; the running sum lives in a VMEM
+  scratch buffer that persists across grid steps (initialized from ``s0`` at
+  step 0, flushed to the output at the last step).
+* each grid step processes TILE_M rows with an in-kernel ``fori_loop``
+  (the recurrence is inherently sequential — the parallelism is inside each
+  row's dot/axpy, which maps onto the VPU lanes).
+* the feature dim ``k`` is padded to a multiple of 128 (lane width) by the
+  ``ops`` wrapper; VMEM budget bounds k at ~128K f32 entries (tile + sum +
+  scratch ≈ 5 MB of the 16 MB VMEM), which is exactly the sketch-mode regime.
+
+Arithmetic is f32 throughout (sign decisions are not robust in bf16).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_M = 8
+
+
+def _balance_kernel(s0_ref, g_ref, signs_ref, s_out_ref, s_scratch):
+    step = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+
+    @pl.when(step == 0)
+    def _init():
+        s_scratch[...] = s0_ref[...]
+
+    def body(r, _):
+        g_row = g_ref[r, :]
+        dot = jnp.sum(s_scratch[0, :] * g_row)
+        eps = jnp.where(dot <= 0.0, 1.0, -1.0).astype(jnp.float32)
+        s_scratch[0, :] = s_scratch[0, :] + eps * g_row
+        signs_ref[r] = eps
+        return 0
+
+    jax.lax.fori_loop(0, g_ref.shape[0], body, 0)
+
+    @pl.when(step == nsteps - 1)
+    def _flush():
+        s_out_ref[...] = s_scratch[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def balance_scan_pallas(s0: jax.Array, g: jax.Array, *, interpret: bool = True):
+    """Run the fused balance scan. s0: [k] f32, g: [m, k] f32.
+
+    Returns (signs [m] f32 in {-1,+1}, s_out [k] f32). The wrapper in
+    ``repro.kernels.ops`` handles padding and dtype; call that instead.
+    """
+    m, k = g.shape
+    assert m % TILE_M == 0 and k % 128 == 0, (m, k)
+    s0_2d = s0.reshape(1, k)
+    grid = (m // TILE_M,)
+    signs, s_out = pl.pallas_call(
+        _balance_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),       # s0 (revisited)
+            pl.BlockSpec((TILE_M, k), lambda i: (i, 0)),  # g tile
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_M,), lambda i: (i,)),      # signs tile
+            pl.BlockSpec((1, k), lambda i: (0, 0)),       # s_out (revisited)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, k), jnp.float32)],
+        interpret=interpret,
+    )(s0_2d, g)
+    return signs, s_out.reshape(k)

@@ -1,0 +1,101 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle padding/reshaping/dtype so callers (the GraB train step, the
+RWKV6/Hymba blocks) can pass natural shapes. ``interpret`` defaults to True
+off-TPU (this container is CPU-only; on a real TPU pod set
+``REPRO_PALLAS_INTERPRET=0`` or rely on the backend autodetect).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.balance import TILE_M, balance_scan_pallas
+from repro.kernels.lin_scan import CHUNK, gla_scan_pallas
+from repro.kernels import ref
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def balance_scan(s0: jax.Array, g: jax.Array, interpret: bool | None = None):
+    """Fused GraB balance scan. s0: [k], g: [m, k] -> (signs [m] int32, s [k]).
+
+    Pads m to a TILE_M multiple with zero rows (zero rows get sign +1 and do
+    not perturb the sum) and k to a lane multiple.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    m, k = g.shape
+    mp, kp = _round_up(max(m, TILE_M), TILE_M), _round_up(max(k, 128), 128)
+    gp = jnp.zeros((mp, kp), jnp.float32).at[:m, :k].set(g.astype(jnp.float32))
+    sp = jnp.zeros((kp,), jnp.float32).at[:k].set(s0.astype(jnp.float32))
+    signs, s_out = balance_scan_pallas(sp, gp, interpret=interpret)
+    return signs[:m].astype(jnp.int32), s_out[:k]
+
+
+def gla_scan(q, k, v, w, u=None, interpret: bool | None = None,
+             post_update: bool = False):
+    """Gated linear attention. q,k,w: [B,H,T,DK]; v: [B,H,T,DV]; u: [H,DK]|None.
+
+    Pads T to a CHUNK multiple (padded steps have k=0, w=1 so the state is
+    unchanged and their outputs are dropped). Returns o: [B, H, T, DV] f32.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, H, T, DK = q.shape
+    DV = v.shape[-1]
+    Tp = _round_up(T, CHUNK)
+    pad = Tp - T
+
+    def pad_t(x, fill):
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                       constant_values=fill) if pad else x
+
+    qp, kp_, vp = pad_t(q, 0.0), pad_t(k, 0.0), pad_t(v, 0.0)
+    wp = pad_t(w, 1.0)
+    u_full = jnp.zeros((H, DK), jnp.float32) if u is None else u.astype(jnp.float32)
+    u_bh = jnp.broadcast_to(u_full[None], (B, H, DK)).reshape(B * H, DK)
+
+    def r(x):
+        return x.reshape(B * H, Tp, x.shape[-1])
+
+    o = gla_scan_pallas(r(qp), r(kp_), r(vp), r(wp), u_bh, interpret=interpret,
+                        post_update=post_update)
+    return o.reshape(B, H, Tp, DV)[:, :, :T, :]
+
+
+# Re-export oracles for test convenience.
+balance_scan_ref = ref.balance_scan_ref
+gla_scan_ref = ref.gla_scan_ref
+
+
+def gla(q, k, v, w, u=None, return_state: bool = False,
+        post_update: bool = False):
+    """Implementation dispatcher used by the model blocks.
+
+    * ``pallas`` — the VMEM-resident kernel (default on real TPU).
+    * ``xla``    — pure-jnp ``lax.scan`` (default off-TPU and for the
+      multi-device dry-run: a pallas_call inside a pjit would be opaque to
+      the SPMD partitioner, so sharded lowering paths use plain XLA).
+
+    Override with REPRO_GLA_IMPL=pallas|xla. ``return_state`` (prefill
+    cache priming) always takes the XLA path.
+    """
+    impl = os.environ.get("REPRO_GLA_IMPL")
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas" and not return_state:
+        return gla_scan(q, k, v, w, u, post_update=post_update)
+    return ref.gla_scan_ref(q, k, v, w, u, return_state=return_state,
+                            post_update=post_update)

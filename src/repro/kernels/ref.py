@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def balance_scan_ref(s0: jax.Array, g: jax.Array):
+    """Sequential balance scan. s0: [k], g: [m, k] -> (signs [m], s_out [k])."""
+    s0 = s0.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+
+    def step(s, row):
+        dot = jnp.sum(s * row)
+        eps = jnp.where(dot <= 0.0, 1.0, -1.0)
+        return s + eps * row, eps
+
+    s_out, signs = jax.lax.scan(step, s0, g)
+    return signs, s_out
+
+
+def gla_scan_ref(q, k, v, w, u=None, return_state: bool = False,
+                 post_update: bool = False):
+    """Gated-linear-attention scan (RWKV6 / Mamba-style recurrence).
+
+    Shapes: q, k, w: [B, H, T, DK]; v: [B, H, T, DV].
+    u: optional [H, DK] current-step bonus (RWKV6's `u`).
+
+    Recurrence per (b, h), with ``post_update=False`` (RWKV convention):
+        o_t = q_t @ (S_{t-1} + diag(u) k_t^T v_t)     (u term only if given)
+        S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    and with ``post_update=True`` (Mamba convention — the output reads the
+    state *after* folding in the current token; u is ignored):
+        S_t = diag(w_t) S_{t-1} + k_t^T v_t
+        o_t = q_t @ S_t
+    Returns o: [B, H, T, DV] (f32), and the final state [B, H, DK, DV] if
+    ``return_state`` (used to prime recurrent caches at prefill).
+    """
+    q, k, v, w = (x.astype(jnp.float32) for x in (q, k, v, w))
+
+    # Chunked two-level scan: a plain length-T scan's VJP stores the [DK,DV]
+    # state per step (gigabytes at T=4k-32k). Outer scan saves the state once
+    # per chunk; the checkpointed inner scan recomputes within a chunk.
+    CHUNK = 128
+
+    def per_head(q_h, k_h, v_h, w_h, u_h):
+        dk, dv = q_h.shape[-1], v_h.shape[-1]
+        T = q_h.shape[0]
+        c = min(CHUNK, T)
+        while T % c:
+            c -= 1
+        nc = T // c
+        r = lambda x: x.reshape(nc, c, x.shape[-1])
+
+        def step(S, inp):
+            q_t, k_t, v_t, w_t = inp
+            kv = jnp.outer(k_t, v_t)
+            if post_update:
+                S = w_t[:, None] * S + kv
+                o_t = q_t @ S
+            else:
+                o_t = q_t @ (S + u_h[:, None] * kv)
+                S = w_t[:, None] * S + kv
+            return S, o_t
+
+        @jax.checkpoint
+        def chunk_step(S, inp):
+            return jax.lax.scan(step, S, inp)
+
+        S0 = jnp.zeros((dk, dv), jnp.float32)
+        S_fin, o = jax.lax.scan(chunk_step, S0,
+                                (r(q_h), r(k_h), r(v_h), r(w_h)))
+        return o.reshape(T, dv), S_fin
+
+    B, H, T, DK = q.shape
+    if u is None:
+        u_full = jnp.zeros((H, DK), jnp.float32)
+    else:
+        u_full = u.astype(jnp.float32)
+    u_b = jnp.broadcast_to(u_full, (B, H, DK))
+    o, S = jax.vmap(jax.vmap(per_head))(q, k, v, w, u_b)
+    return (o, S) if return_state else o

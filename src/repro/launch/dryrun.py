@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any other import touches jax (device count locks at init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+
+Per cell it records compile success, memory_analysis (proves the cell fits),
+cost_analysis FLOPs/bytes, and the collective schedule parsed from the
+compiled HLO — the inputs to EXPERIMENTS.md §Dry-run and §Roofline.
+
+The GLA recurrence takes the pure-XLA path here (REPRO_GLA_IMPL=xla): a
+pallas_call is opaque to the SPMD partitioner; on a real TPU fleet the
+kernel swaps back in (see repro.kernels.ops.gla).
+"""
+import argparse
+import json
+import time
+import traceback
+
+os.environ.setdefault("REPRO_GLA_IMPL", "xla")
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, cell_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_hlo, model_flops, roofline_terms
+from repro.launch.sharding import ShardPolicy
+from repro.launch.specs import make_cell
+from repro.models.config import SHAPES, SHAPES_BY_NAME
+
+
+def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
+             keep_hlo=False, n_micro=None, sketch_dim=0, use_grab=True,
+             pad_heads=False, quant8=False) -> dict:
+    cfg, _ = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(str(s) for s in mesh.devices.shape),
+           "status": "skip", "reason": reason}
+    if not ok:
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name}: {reason}")
+        return rec
+
+    t0 = time.time()
+    from repro.launch.mesh import data_axes
+    from repro.models.act_sharding import set_activation_specs
+    set_activation_specs(data_axes(mesh), model_size=mesh.shape.get("model", 0))
+    try:
+        kw = {"sketch_dim": sketch_dim, "use_grab": use_grab,
+              "pad_heads": pad_heads, "quant8": quant8}
+        if n_micro is not None:
+            kw["n_micro"] = n_micro
+        step_fn, abs_args, in_shardings, donate, meta = make_cell(
+            arch, shape_name, mesh, policy, **kw)
+        from jax.sharding import NamedSharding, PartitionSpec
+        in_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), in_shardings,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        with mesh:
+            jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*abs_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        n_dev = mesh.devices.size
+        hc = analyze_hlo(hlo, n_dev)
+        coll = hc.coll
+
+        flops = hc.flops
+        # Memory term uses the per-device allocation footprint (args + temps
+        # + outputs): every live byte crosses HBM at least once per step.
+        # Exact for decode (weights+cache read once/token); a documented
+        # lower bound for train. The op-level traffic model (hc.hbm_bytes)
+        # overcounts loop-invariant fusion operands and is kept only as a
+        # diagnostic upper bound.
+        footprint = sum(x or 0 for x in (
+            getattr(mem, "argument_size_in_bytes", 0),
+            getattr(mem, "temp_size_in_bytes", 0),
+            getattr(mem, "output_size_in_bytes", 0)))
+        terms = roofline_terms(flops, footprint, coll)
+
+        # useful-FLOPs baseline: 6*N*D train / 2*N*D decode+prefill per chip
+        active_frac = 1.0
+        if cfg.block == "moe":
+            # router+attn full, experts top-k of E
+            dense_no_moe = meta["n_params"] - (
+                cfg.n_layers * 3 * cfg.moe_experts * cfg.d_model * cfg.d_ff)
+            active = dense_no_moe + cfg.n_layers * 3 * cfg.moe_topk * \
+                cfg.d_model * cfg.d_ff
+            active_frac = active / meta["n_params"]
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        mf_global = model_flops(meta["n_params"], tokens, active_frac,
+                                train=(shape.kind == "train"))
+        mf_per_dev = mf_global / n_dev
+
+        rec.update(
+            status="ok", reason="",
+            n_params=meta["n_params"],
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops_per_dev=flops, bytes_per_dev=footprint,
+            traffic_model_bytes=hc.hbm_bytes,
+            xla_cost_flops=float(cost.get("flops", 0.0)),
+            xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+            collective_bytes_per_dev=coll.bytes_moved,
+            collective_count=coll.count,
+            collective_by_kind={k: round(v) for k, v in coll.by_kind.items()},
+            mem_args=getattr(mem, "argument_size_in_bytes", None),
+            mem_output=getattr(mem, "output_size_in_bytes", None),
+            mem_temp=getattr(mem, "temp_size_in_bytes", None),
+            mem_code=getattr(mem, "generated_code_size_in_bytes", None),
+            model_flops_per_dev=mf_per_dev,
+            useful_ratio=(mf_per_dev / flops) if flops else None,
+            **terms,
+        )
+        if keep_hlo:
+            rec["hlo_path"] = _dump_hlo(arch, shape_name, rec["mesh"], hlo)
+        if verbose:
+            hbm = (rec["mem_args"] or 0) + (rec["mem_temp"] or 0) + \
+                (rec["mem_output"] or 0)
+            print(f"[dryrun] {arch} x {shape_name} [{rec['mesh']}] OK "
+                  f"compile={t_compile:.0f}s "
+                  f"mem/dev={(hbm)/2**30:.2f}GiB "
+                  f"compute={terms['compute_s']*1e3:.2f}ms "
+                  f"memory={terms['memory_s']*1e3:.2f}ms "
+                  f"collective={terms['collective_s']*1e3:.2f}ms "
+                  f"dom={terms['dominant']} useful={rec['useful_ratio'] and round(rec['useful_ratio'],3)}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="fail", reason=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} FAIL: {rec['reason'][:300]}")
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def _dump_hlo(arch, shape, mesh, hlo) -> str:
+    d = os.path.join("experiments", "hlo")
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{arch}_{shape}_{mesh}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="single-pod roofline pass + multi-pod compile proof")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--zero1", action="store_true",
+                    help="params TP-only, opt/GraB state FSDP-sharded")
+    ap.add_argument("--no-grab", action="store_true")
+    ap.add_argument("--sketch-dim", type=int, default=0)
+    ap.add_argument("--pad-heads", action="store_true",
+                    help="pad GQA query heads per group to divide TP")
+    ap.add_argument("--quant8", action="store_true",
+                    help="weight-only int8 for decode cells")
+    ap.add_argument("--tag", default="", help="suffix for output json names")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    policy = ShardPolicy(fsdp=not args.no_fsdp, zero1=args.zero1)
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((arch, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [False, True]
+    else:
+        meshes = [args.multi_pod]
+
+    results = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, mesh, policy, keep_hlo=args.keep_hlo,
+                           n_micro=args.n_micro, sketch_dim=args.sketch_dim,
+                           use_grab=not args.no_grab, pad_heads=args.pad_heads,
+                           quant8=args.quant8)
+            results.append(rec)
+            tag = "multipod" if multi_pod else "singlepod"
+            if args.tag:
+                tag += "_" + args.tag
+            fname = os.path.join(args.out, f"{arch}_{shape}_{tag}.json")
+            with open(fname, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} fail "
+          f"of {len(results)} cells")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

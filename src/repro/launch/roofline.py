@@ -1,0 +1,271 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step-per-chip:
+
+  compute    = matmul FLOPs          / PEAK_FLOPS      (197 TF/s bf16, v5e)
+  memory     = modeled HBM traffic   / HBM_BW          (819 GB/s)
+  collective = ring-model time of every collective     (50 GB/s/link ICI)
+
+Why we parse the HLO text ourselves: ``compiled.cost_analysis()`` counts
+every ``while`` body ONCE — with scan-over-layers + a microbatch scan that
+undercounts FLOPs by 100-300x. We rebuild the numbers with trip-count-aware
+folding (XLA annotates ``known_trip_count`` on each while):
+
+* FLOPs     — every ``dot`` (incl. inside fusion bodies), 2*numel(out)*K;
+              elementwise VPU flops are excluded (standard MFU convention).
+* HBM bytes — per *top-level* op in control computations (entry, while
+              bodies): result + operand bytes. Fusion boundaries are exactly
+              where XLA materializes buffers, so fusion parameters/results
+              model HBM traffic well; fusion-internal ops stay in
+              registers/VMEM and are not counted.
+* collective— operand/result bytes x ring factor per op kind and group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # bytes / s / chip
+ICI_BW = 50e9              # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id"}
+_OPCODE_RE = re.compile(r"=\s*\S+\s+([a-z][a-z0-9\-]*)\(")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(\S+)\s+([a-z][a-z0-9\-]*)")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _ring_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind in ("all-gather", "all-to-all"):
+        return (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(g - 1)          # relative to the (shard-sized) result
+    return 1.0                        # collective-permute
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_moved: float = 0.0
+    raw_bytes: float = 0.0
+    count: int = 0
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: CollectiveStats = dataclasses.field(default_factory=CollectiveStats)
+
+    def scaled(self, k: float, bytes_too: bool) -> "HloCost":
+        c = CollectiveStats(self.coll.bytes_moved * k, self.coll.raw_bytes * k,
+                            int(self.coll.count * k),
+                            {kk: v * k for kk, v in self.coll.by_kind.items()})
+        return HloCost(self.flops * k,
+                       self.hbm_bytes * k if bytes_too else 0.0, c)
+
+    def add(self, o: "HloCost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.coll.bytes_moved += o.coll.bytes_moved
+        self.coll.raw_bytes += o.coll.raw_bytes
+        self.coll.count += o.coll.count
+        for k, v in o.coll.by_kind.items():
+            self.coll.by_kind[k] = self.coll.by_kind.get(k, 0.0) + v
+
+
+def analyze_hlo(hlo_text: str, total_devices: int) -> HloCost:
+    """Trip-count-aware FLOPs / HBM-bytes / collective analysis."""
+    # --- split into computations (headers at column 0 ending with '{') ----
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            m = re.match(r"(ENTRY\s+)?%?([^\s(]+)", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = [line]       # header included (fusion params)
+                if m.group(1):
+                    entry = cur
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    def cond_trip(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    # --- per-computation pass -------------------------------------------
+    direct: Dict[str, HloCost] = {}
+    edges: Dict[str, List[tuple]] = {}    # (child, trips, descend_bytes)
+    for name, lines in comps.items():
+        cost = HloCost()
+        edges[name] = []
+        symtab: Dict[str, str] = {}
+        # header params (fusion computations): "pname: f32[8,128]"
+        for m in re.finditer(r"([\w.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\])",
+                             lines[0]):
+            symtab[m.group(1)] = m.group(2)
+        for line in lines[1:]:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            lhs, rtype, opcode = dm.group(1), dm.group(2), dm.group(3)
+            symtab[lhs] = rtype
+            stripped = line.strip()
+
+            # ---- FLOPs: dot ops ----
+            if opcode == "dot":
+                am = re.search(r"dot\(%([\w.\-]+)", stripped)
+                cm_ = re.search(r"lhs_contracting_dims=\{([0-9,]+)\}", stripped)
+                k = 1
+                if am and cm_ and am.group(1) in symtab:
+                    dims = _shape_dims(symtab[am.group(1)])
+                    if dims:
+                        lhs_dims = dims[0][1]
+                        for ci in cm_.group(1).split(","):
+                            ci = int(ci)
+                            if ci < len(lhs_dims):
+                                k *= lhs_dims[ci]
+                numel = 1
+                for _, ds in _shape_dims(rtype):
+                    for d in ds:
+                        numel *= d
+                    break
+                cost.flops += 2.0 * numel * k
+
+            # ---- collectives ----
+            base = opcode.replace("-start", "")
+            if base in _COLLECTIVES and not opcode.endswith("-done"):
+                rb = _shape_bytes(rtype)
+                g = _group_size(stripped, total_devices)
+                moved = rb * _ring_factor(base, g)
+                raw = rb * (g if base == "reduce-scatter" else 1)
+                cost.coll.bytes_moved += moved
+                cost.coll.raw_bytes += raw
+                cost.coll.count += 1
+                cost.coll.by_kind[base] = cost.coll.by_kind.get(base, 0.0) + moved
+
+            # ---- HBM bytes: result + operands of non-free top-level ops --
+            if opcode not in _FREE_OPS:
+                b = _shape_bytes(rtype)
+                pm = re.search(rf"{opcode}\(([^)]*)\)", stripped)
+                if pm:
+                    for om in re.finditer(r"%([\w.\-]+)", pm.group(1)):
+                        b += _shape_bytes(symtab.get(om.group(1), ""))
+                cost.hbm_bytes += b
+
+            # ---- control-flow edges ----
+            wm = re.search(r"condition=%?([^\s,()]+), body=%?([^\s,()]+)",
+                           stripped)
+            if wm:
+                tm = re.search(r'known_trip_count"?:\{"?n"?:"?(\d+)', stripped)
+                trips = int(tm.group(1)) if tm else cond_trip(wm.group(1))
+                edges[name].append((wm.group(2), trips, True))
+            elif opcode == "conditional":
+                for bm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([^\s,()]+))",
+                                      stripped):
+                    targets = (bm.group(1) or bm.group(2) or "")
+                    for t in re.finditer(r"%?([\w.\-]+)", targets):
+                        edges[name].append((t.group(1), 1, True))
+            else:
+                cm2 = re.search(r"(?:calls|to_apply)=%?([^\s,()]+)", stripped)
+                if cm2:
+                    # fusion/reduce bodies: count their dots, not their bytes
+                    edges[name].append((cm2.group(1), 1, False))
+        direct[name] = cost
+
+    # --- fold bottom-up ---------------------------------------------------
+    memo: Dict[Tuple[str, bool], HloCost] = {}
+
+    def total(name: str, with_bytes: bool, stack=()) -> HloCost:
+        key = (name, with_bytes)
+        if key in memo:
+            return memo[key]
+        if name in stack or len(stack) > 64:
+            return HloCost()
+        d = direct.get(name, HloCost())
+        out = HloCost(d.flops, d.hbm_bytes if with_bytes else 0.0,
+                      CollectiveStats(d.coll.bytes_moved, d.coll.raw_bytes,
+                                      d.coll.count, dict(d.coll.by_kind)))
+        for child, trips, descend_bytes in edges.get(name, []):
+            c = total(child, with_bytes and descend_bytes, stack + (name,))
+            out.add(c.scaled(trips, bytes_too=True))
+        memo[key] = out
+        return out
+
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n])) if comps else ""
+    return total(entry, True)
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    return analyze_hlo(hlo_text, total_devices).coll
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll: CollectiveStats) -> dict:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll.bytes_moved / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    terms["step_s"] = max(compute_s, memory_s, collective_s)
+    return terms
+
+
+def model_flops(n_params: int, tokens_per_step: int,
+                active_frac: float = 1.0, train: bool = True) -> float:
+    """6*N*D for a train step; 2*N*D for inference. MoE: scale by active
+    param fraction."""
+    mult = 6.0 if train else 2.0
+    return mult * n_params * active_frac * tokens_per_step

@@ -1,0 +1,159 @@
+"""Rule-based sharding: tree path -> PartitionSpec.
+
+Policy (MaxText-flavored 2D FSDP x TP, per-arch overridable — this is the
+main §Perf hillclimb lever):
+
+* big 2D projections: input dim on the FSDP axis ('data'), output dim on
+  'model' (up-projections) — transposed for down-projections so the matmul's
+  contracting dim stays TP-sharded and the all-reduce happens once per block;
+* embeddings: vocab on 'model' (152k-200k vocabs dominate small archs);
+* MoE expert stacks [E, d, ff]: d on FSDP, ff on 'model' (expert dim stays
+  local: dispatch einsums shard over tokens, expert matmuls over ff);
+* everything 1D / small: replicated;
+* stacked block params ([L, ...] from scan-over-layers) get a leading None.
+
+``fsdp=False`` switches params to TP-only (replicated over 'data') — kills
+the per-microbatch all-gathers at the cost of param memory; right for the
+smaller archs (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPolicy:
+    fsdp: bool = True            # shard params over 'data' too (ZeRO-3-ish)
+    zero1: bool = False          # FSDP only opt/GraB state; params TP-only.
+    #                              Opt state is touched once per step (not
+    #                              per microbatch), so its gathers don't get
+    #                              amplified by gradient accumulation.
+    shard_cache_seq: bool = True  # KV-cache sequence dim on 'model'
+
+    @property
+    def f(self):
+        return "data" if self.fsdp else None
+
+
+def _spec_for(path: str, ndim: int, policy: ShardPolicy) -> P:
+    F = policy.f
+    # order matters: first match wins
+    RULES = [
+        # embeddings / heads / positions
+        (r"(^|/)embed$",                      P("model", None)),
+        (r"(^|/)lm_head$",                    P(None, "model")),
+        (r"(^|/)(dec_pos|enc_pos)$",          P()),
+        # attention (incl. whisper self/cross)
+        (r"attn/w[qkv]$",                     P(F, "model")),
+        (r"attn/wo$",                         P("model", F)),
+        (r"attn/b[qkv]$",                     P("model")),
+        # dense mlp
+        (r"mlp/(wg|wu|wi)$",                  P(F, "model")),
+        (r"mlp/wo$",                          P("model", F)),
+        # moe
+        (r"moe/router$",                      P()),
+        (r"moe/(wg|wu)$",                     P(None, F, "model")),
+        (r"moe/wo$",                          P(None, "model", F)),
+        # rwkv6 time mix
+        (r"tmix/w[rkvg]$",                    P(F, "model")),
+        (r"tmix/wo$",                         P("model", F)),
+        (r"tmix/(wA|wB|w0|u)$",               P()),
+        # rwkv6 channel mix
+        (r"cmix/wk$",                         P(F, "model")),
+        (r"cmix/wv$",                         P("model", F)),
+        (r"cmix/wr$",                         P(F, "model")),
+        # ssm (hymba)
+        (r"ssm/(wx|wz|wB|wC)$",               P(F, "model")),
+        (r"ssm/wo$",                          P("model", F)),
+        (r"ssm/(wdt|dt_bias|a_log|D)$",       P()),
+    ]
+    for pat, spec in RULES:
+        if re.search(pat, path):
+            if len(spec) > ndim:      # e.g. rule for 2D hit a stacked scalar
+                return P()
+            return spec
+    return P()
+
+
+_STACKED = re.compile(r"(^|/)(blocks|enc_blocks|dec_blocks)/")
+
+
+def path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):          # GetAttrKey (NamedTuple fields)
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k).strip("."))
+    return "/".join(parts)
+
+
+def param_spec(key_path, leaf, policy: ShardPolicy) -> P:
+    path = path_str(key_path)
+    # int8-quantized leaves: ".../w/q" shards like the original weight;
+    # ".../w/s" (per-output-channel scale) inherits the output-dim sharding.
+    suffix = None
+    if path.endswith("/q") or path.endswith("/s"):
+        suffix = path[-1]
+        path = path[:-2]
+    stacked = bool(_STACKED.search(path))
+    if suffix == "s":
+        # per-output-channel scale [..., out_dim]: inherit the parent
+        # weight's output-dim sharding, replicate everything else.
+        parent = _spec_for(path, 8, policy)
+        last = parent[-1] if len(parent) else None
+        return P(*([None] * (leaf.ndim - 1) + [last]))
+    ndim = leaf.ndim - (1 if stacked else 0)
+    spec = _spec_for(path, ndim, policy)
+    parts = list(spec) + [None] * (ndim - len(spec))
+    if stacked:
+        parts = [None] + parts
+    return P(*parts)
+
+
+def tree_specs(tree, policy: ShardPolicy):
+    """PartitionSpec pytree matching ``tree`` (params or grads)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, policy), tree)
+
+
+def state_specs(state, policy: ShardPolicy):
+    """Specs for a TrainState: optimizer m/v and GraB pytrees mirror params;
+    scalars replicate. Under ``zero1``, params stay TP-only while opt/GraB
+    state additionally shards over 'data' (their per-step — not per-micro —
+    access pattern makes the FSDP gathers cheap)."""
+    p_policy = dataclasses.replace(policy, fsdp=policy.fsdp and not policy.zero1)
+    s_policy = dataclasses.replace(policy, fsdp=policy.fsdp or policy.zero1)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        head = path_str(path).split("/", 1)[0]
+        pol = p_policy if head == "params" else s_policy
+        return param_spec(path, leaf, pol)
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+def batch_specs(batch_shapes, mesh):
+    """Shard every leaf's batch dim over the data axes.
+
+    Train batches are [n_micro, batch, ...] (batch dim = axis 1);
+    serve batches are [batch, ...] (axis 0). Heuristic: leaves with ndim >= 2
+    and a leading n_micro axis are tagged by the caller instead — here we
+    just take axis index from the caller-provided ``bdim``.
+    """
+    raise NotImplementedError("use explicit specs in dryrun/train drivers")
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

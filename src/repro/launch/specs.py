@@ -1,0 +1,207 @@
+"""Abstract input construction for every (arch x shape) cell.
+
+``make_cell(arch, shape_name, mesh, policy)`` returns:
+  step_fn      — the function to lower (train_step / prefill / decode_step)
+  abstract_args— ShapeDtypeStruct pytree (weak-type-correct, no allocation)
+  in_shardings — matching sharding pytree
+  donate       — arg indices safe to donate
+  meta         — dict (model size, n_micro, notes) for the roofline report
+
+This is the single source of truth the dry-run, the roofline analysis and
+the launch scripts all share.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.grab import GrabConfig
+from repro.launch.mesh import data_axes
+from repro.launch.sharding import ShardPolicy, state_specs, tree_specs, path_str
+from repro.models import lm, whisper
+from repro.models.config import SHAPES_BY_NAME, ModelConfig
+from repro.optim import adamw, cosine
+from repro.serve.engine import build_decode_step, build_prefill
+from repro.train.step import build_train_step, init_train_state
+from repro.utils.tree import param_count
+
+N_MICRO = 8     # microbatches per optimizer step (GraB balancing granularity)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dp(mesh, batch: int):
+    """Batch-dim spec: shard over data axes when divisible, else replicate."""
+    axes = data_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return axes if batch % total == 0 and batch >= total else None
+
+
+def _cache_spec(mesh, path, leaf, policy: ShardPolicy) -> P:
+    """Generic serving-cache sharding: axis0 = layers (None), axis1 = batch
+    (data axes if divisible), then the first remaining axis divisible by the
+    model-axis size goes on 'model' (KV-cache seq / recurrent heads)."""
+    if leaf.ndim <= 1:
+        return P()
+    model_n = mesh.shape["model"]
+    batch = leaf.shape[1]
+    parts = [None, _dp(mesh, batch)]
+    placed = not policy.shard_cache_seq
+    for dim in leaf.shape[2:]:
+        if not placed and dim % model_n == 0 and dim >= model_n:
+            parts.append("model")
+            placed = True
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def _loss_for(cfg: ModelConfig):
+    if cfg.enc_dec:
+        return lambda p, mb: whisper.loss_fn(p, cfg, mb, remat=True)
+    return lambda p, mb: lm.loss_fn(p, cfg, mb, remat=True)
+
+
+def _init_params_fn(cfg: ModelConfig, max_dec_len: int = 4096):
+    key = jax.random.PRNGKey(0)
+    if cfg.enc_dec:
+        return lambda: whisper.init_whisper(key, cfg, max_dec_len=max_dec_len)
+    return lambda: lm.init_lm(key, cfg)
+
+
+def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = None,
+              use_grab: bool = True, n_micro: int = N_MICRO,
+              sketch_dim: int = 0, pad_heads: bool = False,
+              quant8: bool = False):
+    policy = policy or ShardPolicy()
+    cfg, _ = get_config(arch)
+    if pad_heads:
+        # smallest per-group pad that makes padded heads divide the TP size
+        tp = mesh.shape.get("model", 1)
+        r = cfg.n_heads // cfg.n_kv_heads
+        pad = 0
+        while (cfg.n_kv_heads * (r + pad)) % tp and pad <= tp:
+            pad += 1
+        if (cfg.n_kv_heads * (r + pad)) % tp == 0:
+            cfg = cfg.with_(q_head_pad=pad)
+    shape = SHAPES_BY_NAME[shape_name]
+    dp = _dp(mesh, shape.global_batch)
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    params_abs = jax.eval_shape(_init_params_fn(cfg,
+                                                max_dec_len=shape.seq_len + 64))
+    p_specs = tree_specs(params_abs, policy)
+    n_params = param_count(params_abs)
+
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "n_params": n_params, "seq_len": shape.seq_len,
+            "global_batch": shape.global_batch}
+
+    if shape.kind == "train":
+        opt = adamw()
+        grab_cfg = None
+        sketch = None
+        if use_grab:
+            grab_cfg = GrabConfig(sketch_dim=sketch_dim)
+            if sketch_dim:
+                from repro.core.grab import make_sketch
+                sketch = make_sketch(params_abs, sketch_dim)
+        loss = _loss_for(cfg)
+        mb = shape.global_batch // n_micro
+        assert shape.global_batch % n_micro == 0
+
+        import dataclasses as _dc
+        g_policy = _dc.replace(policy, fsdp=policy.fsdp or policy.zero1)
+        g_specs = tree_specs(params_abs, g_policy)
+
+        def constrain_grads(tree):
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                tree, g_specs)
+
+        step_fn = build_train_step(loss, opt, cosine(3e-4, 10_000, 200),
+                                   grab_cfg, n_micro_per_epoch=1024,
+                                   sketch=sketch,
+                                   constrain_grads=constrain_grads)
+        state_abs = jax.eval_shape(
+            lambda: init_train_state(params_abs, opt, grab_cfg))
+        s_specs = state_specs(state_abs, policy)
+
+        if cfg.enc_dec:
+            batch_abs = {
+                "frames": _sds((n_micro, mb, cfg.enc_frames, cfg.d_model), dtype),
+                "tokens": _sds((n_micro, mb, shape.seq_len), jnp.int32),
+                "labels": _sds((n_micro, mb, shape.seq_len), jnp.int32)}
+        elif cfg.prefix_embed_len:
+            t = shape.seq_len - cfg.prefix_embed_len
+            batch_abs = {
+                "prefix_embeds": _sds((n_micro, mb, cfg.prefix_embed_len,
+                                       cfg.d_model), dtype),
+                "tokens": _sds((n_micro, mb, t), jnp.int32),
+                "labels": _sds((n_micro, mb, t), jnp.int32)}
+        else:
+            batch_abs = {"tokens": _sds((n_micro, mb, shape.seq_len), jnp.int32),
+                         "labels": _sds((n_micro, mb, shape.seq_len), jnp.int32)}
+        mb_dp = _dp(mesh, mb)
+        b_specs = jax.tree.map(
+            lambda l: P(*([None, mb_dp] + [None] * (l.ndim - 2))), batch_abs)
+        meta.update(n_micro=n_micro, micro_batch=mb)
+        return (step_fn, (state_abs, batch_abs), (s_specs, b_specs), (0,), meta)
+
+    if shape.kind == "prefill":
+        step_fn = build_prefill(cfg, max_len=shape.seq_len + 64)
+        if cfg.enc_dec:
+            batch_abs = {"frames": _sds((shape.global_batch, cfg.enc_frames,
+                                         cfg.d_model), dtype),
+                         "tokens": _sds((shape.global_batch, shape.seq_len),
+                                        jnp.int32)}
+        elif cfg.prefix_embed_len:
+            batch_abs = {"tokens": _sds((shape.global_batch,
+                                         shape.seq_len - cfg.prefix_embed_len),
+                                        jnp.int32),
+                         "prefix_embeds": _sds((shape.global_batch,
+                                                cfg.prefix_embed_len,
+                                                cfg.d_model), dtype)}
+            inner = step_fn
+
+            def step_fn(params, batch):   # noqa: F811 — wrap to pass prefix
+                return lm.prefill(params, cfg, batch["tokens"],
+                                  shape.seq_len + 64,
+                                  prefix_embeds=batch["prefix_embeds"])
+        else:
+            batch_abs = {"tokens": _sds((shape.global_batch, shape.seq_len),
+                                        jnp.int32)}
+        b_specs = jax.tree.map(
+            lambda l: P(*([dp] + [None] * (l.ndim - 1))), batch_abs)
+        return (step_fn, (params_abs, batch_abs), (p_specs, b_specs), (), meta)
+
+    # decode: one new token against a seq_len-deep cache
+    step_fn = build_decode_step(cfg)
+    if quant8 and not cfg.enc_dec:
+        from repro.serve.quant import quantize_abstract
+        params_abs = quantize_abstract(params_abs)
+        p_specs = tree_specs(params_abs, policy)
+    token_abs = _sds((shape.global_batch,), jnp.int32)
+    if cfg.enc_dec:
+        frames_abs = _sds((shape.global_batch, cfg.enc_frames, cfg.d_model), dtype)
+        cache_abs = jax.eval_shape(
+            lambda p, f: whisper.init_dec_cache(p, cfg, f, shape.seq_len),
+            params_abs, frames_abs)
+    else:
+        cache_abs = jax.eval_shape(
+            lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                  quant_cache=quant8))
+    c_specs = jax.tree_util.tree_map_with_path(
+        lambda path, l: _cache_spec(mesh, path, l, policy), cache_abs)
+    t_spec = P(dp)
+    return (step_fn, (params_abs, token_abs, cache_abs),
+            (p_specs, t_spec, c_specs), (2,), meta)

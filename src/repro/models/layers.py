@@ -1,0 +1,290 @@
+"""Shared layers: norms, RoPE, GQA attention (bias / sliding-window / cache),
+SwiGLU and GeLU MLPs. Pure functions over explicit param pytrees — no
+framework magic, so sharding rules can address every leaf by path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.act_sharding import constrain
+
+NEG_INF = -1e30
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), _dtype(cfg))}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((d,), _dtype(cfg))
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "ln":
+        mu = x32.mean(-1, keepdims=True)
+        var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (x32 ** 2).mean(-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, hd]; positions: [B, T] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [B, T, half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    """Weights sized for the *padded* head count (cfg.q_head_pad, default 0).
+    Padded heads are masked to zero at the attention output, so the model is
+    mathematically identical to the unpadded one — padding only aligns the
+    head axis to the TP degree (see ModelConfig)."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    d, Hp, KV, hd = cfg.d_model, cfg.n_heads_padded, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": dense_init(ks[0], (d, Hp * hd), dt),
+        "wk": dense_init(ks[1], (d, KV * hd), dt),
+        "wv": dense_init(ks[2], (d, KV * hd), dt),
+        "wo": dense_init(ks[3], (Hp * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hp * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    return p
+
+
+def _head_mask(cfg: ModelConfig):
+    """[H_pad] float mask: 1 for real heads, 0 for TP-alignment pad heads.
+    Head (g, r) is real iff r < the original per-group head count."""
+    if not cfg.q_head_pad:
+        return None
+    r_orig = cfg.n_heads // cfg.n_kv_heads
+    r = jnp.arange(cfg.n_heads_padded) % cfg.n_rep
+    return (r < r_orig).astype(jnp.float32)
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, use_rope: bool):
+    B, T, _ = x.shape
+    Hp, KV, hd = cfg.n_heads_padded, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"] + (p.get("bq", 0))).reshape(B, T, Hp, hd)
+    k = (x @ p["wk"] + (p.get("bk", 0))).reshape(B, T, KV, hd)
+    v = (x @ p["wv"] + (p.get("bv", 0))).reshape(B, T, KV, hd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # TP layout: query heads shard on 'model' when they divide it; K/V heads
+    # replicate (GQA with KV < TP). No-ops off-mesh.
+    q = constrain(q, "heads")
+    k = constrain(k, "kv")
+    v = constrain(v, "kv")
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q: [B,T,H,hd]; k,v: [B,S,KV,hd]; mask: [B,T,S] bool (True = attend)."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    qg = q.reshape(B, T, KV, n_rep, hd)
+    logits = jnp.einsum("btkrh,bskh->bktrs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    logits = jnp.where(mask[:, None, :, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bktrs,bskh->btkrh", probs, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def causal_mask(T: int, S: int, offset: int, window: Optional[int]):
+    """[T, S] bool. Query t (absolute pos offset+t) attends key s iff
+    s <= offset+t and (window is None or s > offset+t-window)."""
+    qpos = offset + jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+FLASH_MIN_T = 1024   # below this the plain einsum path is cheaper
+
+
+def apply_attention(p, x, cfg: ModelConfig, positions, *, causal: bool = True,
+                    use_rope: bool = True, return_kv: bool = False):
+    """Full-sequence attention (train / prefill). x: [B, T, d].
+
+    Long sequences take the chunked flash path (O(chunk^2) logits memory);
+    short ones the plain einsum path. Both are numerically interchangeable
+    (tested to ~1e-5)."""
+    from repro.models.attention import flash_attention
+
+    B, T, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions, use_rope)
+    if T >= FLASH_MIN_T:
+        out = flash_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    else:
+        if causal:
+            mask = causal_mask(T, T, 0, cfg.sliding_window)[None]
+        else:
+            mask = jnp.ones((1, T, T), bool)
+        out = _sdpa(q, k, v, jnp.broadcast_to(mask, (B, T, T)), cfg.n_rep)
+    hm = _head_mask(cfg)
+    if hm is not None:
+        out = out * hm[None, None, :, None].astype(out.dtype)
+    y = out.reshape(B, T, -1) @ p["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def apply_attention_decode(p, x, cfg: ModelConfig, cache: dict):
+    """One-token decode against a KV cache.
+
+    cache: {"k": [B, L, KV, hd], "v": same, "idx": [] int32} where L is the
+    cache capacity (sliding-window archs allocate L = window and write
+    round-robin; full-attention archs allocate L = max context).
+    """
+    B = x.shape[0]
+    idx = cache["idx"]
+    L = cache["k"].shape[1]
+    positions = jnp.broadcast_to(idx[None, None], (B, 1))
+    q, k, v = _qkv(p, x, cfg, positions, use_rope=True)
+    slot = idx % L if cfg.sliding_window is not None else idx
+    quant = "k_s" in cache
+    new_cache = {"idx": idx + 1}
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        c8k = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        c8v = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        csk = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, slot, 0))
+        csv = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, slot, 0))
+        new_cache.update(k=c8k, v=c8v, k_s=csk, v_s=csv)
+        # dequantized one-layer transient (the persistent cache stays int8)
+        ck = (c8k.astype(jnp.float32) * csk[..., None]).astype(k.dtype)
+        cv = (c8v.astype(jnp.float32) * csv[..., None]).astype(v.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache.update(k=ck, v=cv)
+    kpos = jnp.arange(L)
+    if cfg.sliding_window is not None:
+        # ring buffer: valid slots are the last min(idx+1, L) writes
+        age = (slot - kpos) % L
+        valid = age <= jnp.minimum(idx, L - 1)
+    else:
+        valid = kpos <= idx
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, L))
+    out = _sdpa(q, ck, cv, mask, cfg.n_rep)
+    hm = _head_mask(cfg)
+    if hm is not None:
+        out = out * hm[None, None, :, None].astype(out.dtype)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         quant: bool = False):
+    """KV cache; ``quant=True`` stores int8 entries with per-(token, head)
+    scales — halves the dominant decode-residency for MHA archs (36/32 KV
+    heads at 32k x 128 batch otherwise exceed a v5e's 16 GiB)."""
+    L = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    dt = _dtype(cfg)
+    shape = (batch, L, cfg.n_kv_heads, cfg.hd)
+    c = {"idx": jnp.int32(0)}
+    if quant:
+        c.update(k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+                 k_s=jnp.zeros(shape[:3], jnp.float32),
+                 v_s=jnp.zeros(shape[:3], jnp.float32))
+    else:
+        c.update(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt))
+    return c
+
+
+def _quantize_kv(x):
+    """x: [B, T, KV, hd] -> (int8 values, f32 scales [B, T, KV])."""
+    x32 = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / s[..., None]), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def apply_cross_attention(p, x, memory, cfg: ModelConfig):
+    """x: [B, T, d] queries; memory: [B, F, d] encoder output (no RoPE)."""
+    B, T, _ = x.shape
+    F = memory.shape[1]
+    Hp, KV, hd = cfg.n_heads_padded, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"] + (p.get("bq", 0))).reshape(B, T, Hp, hd)
+    k = (memory @ p["wk"] + (p.get("bk", 0))).reshape(B, F, KV, hd)
+    v = (memory @ p["wv"] + (p.get("bv", 0))).reshape(B, F, KV, hd)
+    mask = jnp.ones((B, T, F), bool)
+    out = _sdpa(q, k, v, mask, cfg.n_rep)
+    hm = _head_mask(cfg)
+    if hm is not None:
+        out = out * hm[None, None, :, None].astype(out.dtype)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wg": dense_init(k1, (d, ff), dt),
+                "wu": dense_init(k2, (d, ff), dt),
+                "wo": dense_init(k3, (ff, d), dt)}
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, (d, ff), dt),
+            "bi": jnp.zeros((ff,), dt),
+            "wo": dense_init(k2, (ff, d), dt),
+            "bo": jnp.zeros((d,), dt)}
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"] + p["bi"]) @ p["wo"] + p["bo"]

@@ -1,0 +1,81 @@
+"""Mixture-of-Experts layer — GShard-style grouped top-k dispatch.
+
+Why this formulation (vs. megablocks / ragged_dot): every op here is an
+einsum or a cumsum, so XLA's SPMD partitioner shards it cleanly on the
+(data, model) mesh with no shard_map or data-dependent shapes — which is what
+the 512-device dry-run must prove. Expert weights are 3D ``[E, d, ff]``
+tensors 2D-sharded over ('data','model') like every other big weight.
+
+Cost accounting (recorded in the roofline): dispatch+combine einsums add
+``2 * E * C / (topk * 3 * ff)`` relative FLOPs — ~3% for mixtral's shapes at
+capacity 1.25 with 512-token groups. Tokens beyond expert capacity within a
+group are dropped (standard GShard semantics; capacity_factor configurable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, _dtype
+
+
+def init_moe(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d, E), jnp.float32),
+        "wg": dense_init(k2, (E, d, ff), dt),
+        "wu": dense_init(k3, (E, d, ff), dt),
+        "wo": dense_init(k4, (E, ff, d), dt),
+    }
+
+
+def _capacity(cfg: ModelConfig, group: int) -> int:
+    c = int(group * cfg.moe_topk * cfg.moe_capacity / cfg.moe_experts)
+    return max(c, cfg.moe_topk)
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: [B, T, d] -> [B, T, d]. Routes per token, top-k, grouped dispatch."""
+    B, T, d = x.shape
+    E, K = cfg.moe_experts, cfg.moe_topk
+    Sg = min(cfg.moe_group, T)
+    assert T % Sg == 0, (T, Sg)
+    G = T // Sg
+    C = _capacity(cfg, Sg)
+
+    xg = x.reshape(B * G, Sg, d)
+
+    logits = xg.astype(jnp.float32) @ p["router"]                 # [g, Sg, E]
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = jax.lax.top_k(gates_all, K)                  # [g, Sg, K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)            # [g, Sg, K, E]
+    flat = onehot.reshape(-1, Sg * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                          # pos within expert
+    pos = pos.reshape(-1, Sg, K, E)
+    in_cap = pos < C                                               # [g, Sg, K, E]
+    pos_in_expert = (pos * onehot).sum(-1).astype(jnp.int32)       # [g, Sg, K]
+    pos_oh = jax.nn.one_hot(pos_in_expert, C, dtype=jnp.float32)   # [g, Sg, K, C]
+    keep = (onehot * in_cap).astype(jnp.float32)                   # [g, Sg, K, E]
+
+    # dispatch[g, s, e, c] = 1 iff token s goes to expert e at slot c
+    dispatch = jnp.einsum("gske,gskc->gsec", keep, pos_oh)
+    combine = jnp.einsum("gske,gsk,gskc->gsec", keep, gate_vals, pos_oh)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg.astype(jnp.float32))
+    xe = xe.astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+
+    # auxiliary load-balancing loss (Switch-style), returned for the trainer
+    density = onehot.sum(2).mean(1)                               # [g, E] token frac
+    router_prob = gates_all.mean(1)                               # [g, E]
+    aux = (density * router_prob).sum(-1).mean() * E
+
+    return y.reshape(B, T, d), aux

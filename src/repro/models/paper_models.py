@@ -1,0 +1,173 @@
+"""The paper's own experiment models (§6): logistic regression (MNIST),
+LeNet (CIFAR10), 2-layer LSTM (WikiText-2), BERT-Tiny (GLUE).
+
+Small, pure-JAX, with per-example-gradient-friendly ``loss_one`` entry points
+(the paper's §6 note: JAX computes per-example grads natively via vmap(grad)).
+Each model exposes: init(key, ...), loss(params, batch), loss_one(params, x, y).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ce(logits, y):
+    logits = logits.astype(jnp.float32)
+    return jax.nn.logsumexp(logits, -1) - jnp.take_along_axis(
+        logits, y[..., None], -1)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression
+# ---------------------------------------------------------------------------
+
+def logreg_init(key, n_features: int = 784, n_classes: int = 10):
+    return {"w": jnp.zeros((n_features, n_classes), jnp.float32),
+            "b": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def logreg_loss(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    return _ce(logits, batch["y"]).mean()
+
+
+# ---------------------------------------------------------------------------
+# LeNet-style CNN
+# ---------------------------------------------------------------------------
+
+def lenet_init(key, in_ch: int = 3, n_classes: int = 10, img: int = 32):
+    ks = jax.random.split(key, 5)
+    he = lambda k, s: jax.random.normal(k, s, jnp.float32) * (2.0 / (s[0] * s[1] * s[2])) ** 0.5
+    flat = ((img - 4) // 2 - 4) // 2  # two valid 5x5 convs + 2x2 pools
+    return {
+        "c1": he(ks[0], (5, 5, in_ch, 6)), "b1": jnp.zeros((6,)),
+        "c2": he(ks[1], (5, 5, 6, 16)), "b2": jnp.zeros((16,)),
+        "f1": jax.random.normal(ks[2], (flat * flat * 16, 120)) * 0.05,
+        "fb1": jnp.zeros((120,)),
+        "f2": jax.random.normal(ks[3], (120, 84)) * 0.1, "fb2": jnp.zeros((84,)),
+        "f3": jax.random.normal(ks[4], (84, n_classes)) * 0.1,
+        "fb3": jnp.zeros((n_classes,)),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(x, w, (1, 1), "VALID",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def lenet_loss(params, batch):
+    x = batch["x"]  # [B, H, W, C]
+    x = _pool(_conv(x, params["c1"], params["b1"]))
+    x = _pool(_conv(x, params["c2"], params["b2"]))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1"] + params["fb1"])
+    x = jax.nn.relu(x @ params["f2"] + params["fb2"])
+    logits = x @ params["f3"] + params["fb3"]
+    return _ce(logits, batch["y"]).mean()
+
+
+# ---------------------------------------------------------------------------
+# 2-layer LSTM LM
+# ---------------------------------------------------------------------------
+
+def lstm_init(key, vocab: int = 1024, emb: int = 32, hidden: int = 32,
+              layers: int = 2):
+    ks = jax.random.split(key, 2 + 2 * layers)
+    p = {"embed": jax.random.normal(ks[0], (vocab, emb)) * 0.1, "cells": []}
+    dim_in = emb
+    cells = []
+    for i in range(layers):
+        cells.append({
+            "wx": jax.random.normal(ks[1 + 2 * i], (dim_in, 4 * hidden)) * dim_in ** -0.5,
+            "wh": jax.random.normal(ks[2 + 2 * i], (hidden, 4 * hidden)) * hidden ** -0.5,
+            "b": jnp.zeros((4 * hidden,)),
+        })
+        dim_in = hidden
+    p["cells"] = cells
+    p["head"] = jax.random.normal(ks[-1], (hidden, vocab)) * hidden ** -0.5
+    return p
+
+
+def _lstm_layer(cell, xs):
+    hdim = cell["wh"].shape[0]
+    B = xs.shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        z = x_t @ cell["wx"] + h @ cell["wh"] + cell["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, hdim)), jnp.zeros((B, hdim)))
+    _, hs = jax.lax.scan(step, init, xs.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def lstm_loss(params, batch):
+    x = params["embed"][batch["x"]]     # [B, T, emb]
+    for cell in params["cells"]:
+        x = _lstm_layer(cell, x)
+    logits = x @ params["head"]
+    return _ce(logits, batch["y"]).mean()
+
+
+# ---------------------------------------------------------------------------
+# BERT-Tiny classifier (2 layers, bidirectional)
+# ---------------------------------------------------------------------------
+
+def bert_tiny_init(key, vocab: int = 8192, d: int = 128, layers: int = 2,
+                   heads: int = 2, ff: int = 512, n_classes: int = 2,
+                   max_len: int = 64):
+    ks = jax.random.split(key, 2 + 5 * layers)
+    p = {"embed": jax.random.normal(ks[0], (vocab, d)) * 0.02,
+         "pos": jax.random.normal(ks[1], (max_len, d)) * 0.02,
+         "blocks": [], "cls": jax.random.normal(ks[-1], (d, n_classes)) * d ** -0.5}
+    for i in range(layers):
+        base = 2 + 5 * i
+        p["blocks"].append({
+            "wq": jax.random.normal(ks[base], (d, d)) * d ** -0.5,
+            "wk": jax.random.normal(ks[base + 1], (d, d)) * d ** -0.5,
+            "wv": jax.random.normal(ks[base + 2], (d, d)) * d ** -0.5,
+            "wo": jax.random.normal(ks[base + 3], (d, d)) * d ** -0.5,
+            "w1": jax.random.normal(ks[base + 4], (d, ff)) * d ** -0.5,
+            "b1": jnp.zeros((ff,)),
+            "w2": jax.random.normal(ks[base], (ff, d)) * ff ** -0.5,
+            "b2": jnp.zeros((d,)),
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+        })
+    return p
+
+
+def _ln(x, scale):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def bert_tiny_loss(params, batch, heads: int = 2):
+    x_ids = batch["x"]                  # [B, T]
+    B, T = x_ids.shape
+    x = params["embed"][x_ids] + params["pos"][None, :T]
+    d = x.shape[-1]
+    hd = d // heads
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"])
+        q = (h @ blk["wq"]).reshape(B, T, heads, hd)
+        k = (h @ blk["wk"]).reshape(B, T, heads, hd)
+        v = (h @ blk["wv"]).reshape(B, T, heads, hd)
+        logits = jnp.einsum("bthd,bshd->bhts", q, k) * hd ** -0.5
+        attn = jax.nn.softmax(logits, -1)
+        o = jnp.einsum("bhts,bshd->bthd", attn, v).reshape(B, T, d)
+        x = x + o @ blk["wo"]
+        h = _ln(x, blk["ln2"])
+        x = x + jax.nn.gelu(h @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+    cls = x[:, 0]
+    return _ce(cls @ params["cls"], batch["y"]).mean()

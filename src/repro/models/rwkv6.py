@@ -1,0 +1,148 @@
+"""RWKV6 "Finch" block — attention-free, data-dependent decay.
+
+Faithful to the arXiv:2404.05892 structure at block level (token-shift
+interpolation, per-channel data-dependent decay via a low-rank adapter,
+per-head WKV state with bonus ``u``, grouped output norm, squared-ReLU
+channel mix), with the WKV recurrence executed by the Pallas chunked GLA
+kernel (``repro.kernels.lin_scan``) in train/prefill and a closed-form
+single-step update in decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, _dtype, apply_norm, init_norm
+from repro.models.act_sharding import constrain
+from repro.kernels.ops import gla
+
+LORA_R = 64
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.ssm_heads or cfg.d_model // 64
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    H = _heads(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt), "mu_w": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "wr": dense_init(ks[0], (d, d), dt),
+        "wk": dense_init(ks[1], (d, d), dt),
+        "wv": dense_init(ks[2], (d, d), dt),
+        "wg": dense_init(ks[3], (d, d), dt),
+        "wo": dense_init(ks[4], (d, d), dt),
+        # data-dependent decay: w = exp(-exp(w0 + (tanh(x A) B)))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wA": dense_init(ks[5], (d, LORA_R), dt),
+        "wB": dense_init(ks[6], (LORA_R, d), dt, scale=0.01),
+        "u": dense_init(ks[7], (H, d // H), jnp.float32, scale=0.5),
+        "ln_out": {"scale": jnp.ones((d,), dt), "bias": jnp.zeros((d,), dt)},
+    }
+
+
+def _token_shift(x, mu, x_prev=None):
+    """lerp(x_{t-1}, x_t, mu). x: [B,T,d]; x_prev: [B,d] carry for decode."""
+    if x_prev is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        shifted = x_prev[:, None, :]
+    return shifted + mu * (x - shifted)
+
+
+def _group_norm(p, x, H, eps=1e-5):
+    """Per-head layernorm of the WKV output. x: [B, T, H, hd]."""
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    B, T = x.shape[:2]
+    y = y.reshape(B, T, -1) * p["scale"].astype(jnp.float32) + \
+        p["bias"].astype(jnp.float32)
+    return y
+
+
+def _rwkv_qkvw(p, x, cfg: ModelConfig, x_prev=None):
+    H = _heads(cfg)
+    hd = cfg.d_model // H
+    B, T, d = x.shape
+    xr = _token_shift(x, p["mu_r"], x_prev)
+    xk = _token_shift(x, p["mu_k"], x_prev)
+    xv = _token_shift(x, p["mu_v"], x_prev)
+    xw = _token_shift(x, p["mu_w"], x_prev)
+    xg = _token_shift(x, p["mu_g"], x_prev)
+    r = (xr @ p["wr"]).reshape(B, T, H, hd)
+    k = (xk @ p["wk"]).reshape(B, T, H, hd)
+    v = (xv @ p["wv"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["wA"].astype(jnp.float32)) @ \
+        p["wB"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"] + dd)).reshape(B, T, H, hd)     # decay in (0,1)
+    return r, k, v, w, g
+
+
+def apply_rwkv_time_mix(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence WKV via the chunked GLA kernel. x: [B, T, d]."""
+    B, T, d = x.shape
+    H = _heads(cfg)
+    r, k, v, w, g = _rwkv_qkvw(p, x, cfg)
+    # kernel layout: [B, H, T, hd]; heads shard on 'model' when divisible
+    tr = lambda z: constrain(z.transpose(0, 2, 1, 3), "bhtd")
+    res = gla(tr(r), tr(k), tr(v), tr(w), p["u"], return_state=return_state)
+    o, S = res if return_state else (res, None)
+    o = constrain(o, "bhtd").transpose(0, 2, 1, 3)               # [B, T, H, hd]
+    y = _group_norm(p["ln_out"], o, H).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    if return_state:
+        return out, S
+    return out
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    H = _heads(cfg)
+    hd = cfg.d_model // H
+    return {"S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_prev": jnp.zeros((batch, cfg.d_model), _dtype(cfg)),
+            "x_prev_cm": jnp.zeros((batch, cfg.d_model), _dtype(cfg))}
+
+
+def apply_rwkv_time_mix_decode(p, x, cfg: ModelConfig, state):
+    """Single-token recurrent step. x: [B, 1, d]."""
+    B = x.shape[0]
+    H = _heads(cfg)
+    r, k, v, w, g = _rwkv_qkvw(p, x, cfg, x_prev=state["x_prev"])
+    r1, k1, v1, w1 = (z[:, 0].astype(jnp.float32) for z in (r, k, v, w))
+    S = state["S"]                                               # [B, H, hd, hd]
+    kv = k1[..., :, None] * v1[..., None, :]                     # [B, H, hd, hd]
+    o = jnp.einsum("bhk,bhkv->bhv", r1, S + p["u"][None, :, :, None] * kv)
+    S = w1[..., :, None] * S + kv
+    o = o[:, None].reshape(B, 1, H, -1)
+    y = _group_norm(p["ln_out"], o, H).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    new_state = dict(state, S=S, x_prev=x[:, 0])
+    return out, new_state
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt), "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": dense_init(k1, (d, ff), dt),
+        "wv": dense_init(k2, (ff, d), dt),
+        "wr": dense_init(k3, (d, d), dt),
+    }
+
+
+def apply_rwkv_channel_mix(p, x, cfg: ModelConfig, x_prev=None):
+    xk = _token_shift(x, p["mu_k"], x_prev)
+    xr = _token_shift(x, p["mu_r"], x_prev)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])

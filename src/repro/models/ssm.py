@@ -1,0 +1,98 @@
+"""Mamba-style selective SSM head group (used by Hymba's parallel-head block).
+
+Mamba2-flavored diagonal recurrence per head (state N = cfg.ssm_state):
+
+    h_t = exp(-softplus(dt_t) * a) * h_{t-1} + dt' * x_t (x) B_t
+    y_t = C_t . h_t + D * x_t
+
+mapped onto the shared GLA kernel with q=C, k=B*dt', v=x, w=decay broadcast
+over N. Single-step closed form for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, _dtype
+from repro.models.act_sharding import constrain
+from repro.kernels.ops import gla
+
+
+def ssm_dims(cfg: ModelConfig):
+    H = cfg.ssm_heads or max(cfg.d_model // 64, 1)
+    P = cfg.d_model // H          # per-head channel dim
+    N = cfg.ssm_state
+    return H, P, N
+
+
+def init_ssm(key, cfg: ModelConfig):
+    dt_ = _dtype(cfg)
+    d = cfg.d_model
+    H, P, N = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], (d, H * P), dt_),        # value path
+        "wz": dense_init(ks[1], (d, H * P), dt_),        # gate
+        "wB": dense_init(ks[2], (d, H * N), dt_),
+        "wC": dense_init(ks[3], (d, H * N), dt_),
+        "wdt": dense_init(ks[4], (d, H), dt_, scale=0.01),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),           # a = exp(a_log) > 0
+        "D": jnp.ones((H, P), jnp.float32),
+        "wo": dense_init(ks[5], (H * P, d), dt_),
+    }
+
+
+def _proj(p, x, cfg: ModelConfig):
+    B, T, d = x.shape
+    H, P, N = ssm_dims(cfg)
+    xh = (x @ p["wx"]).reshape(B, T, H, P)
+    z = jax.nn.silu(x @ p["wz"]).reshape(B, T, H, P)
+    Bm = (x @ p["wB"]).reshape(B, T, H, N)
+    Cm = (x @ p["wC"]).reshape(B, T, H, N)
+    dt = jax.nn.softplus((x.astype(jnp.float32) @ p["wdt"].astype(jnp.float32))
+                         + p["dt_bias"])                     # [B, T, H] > 0
+    a = jnp.exp(p["a_log"])                                  # [H]
+    decay = jnp.exp(-dt * a)                                 # in (0, 1)
+    return xh, z, Bm, Cm, dt, decay
+
+
+def apply_ssm(p, x, cfg: ModelConfig, return_state: bool = False):
+    """x: [B, T, d] -> [B, T, d] (full-sequence, GLA kernel)."""
+    B, T, d = x.shape
+    H, P, N = ssm_dims(cfg)
+    xh, z, Bm, Cm, dt, decay = _proj(p, x, cfg)
+    tr = lambda t_: constrain(t_.transpose(0, 2, 1, 3), "bhtd")  # -> [B, H, T, *]
+    k = tr(Bm) * dt.transpose(0, 2, 1)[..., None]            # fold dt into k
+    w = jnp.broadcast_to(decay.transpose(0, 2, 1)[..., None], (B, H, T, N))
+    res = gla(tr(Cm), k, tr(xh), w, return_state=return_state,
+              post_update=True)
+    o, S = res if return_state else (res, None)              # S: [B, H, N, P]
+    o = o + p["D"][None, :, None, :] * tr(xh).astype(jnp.float32)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, H * P).astype(x.dtype)
+    out = (o * z.reshape(B, T, H * P)) @ p["wo"]
+    if return_state:
+        return out, {"h": S}
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    H, P, N = ssm_dims(cfg)
+    return {"h": jnp.zeros((batch, H, N, P), jnp.float32)}
+
+
+def apply_ssm_decode(p, x, cfg: ModelConfig, state):
+    """x: [B, 1, d]; closed-form single step."""
+    B = x.shape[0]
+    H, P, N = ssm_dims(cfg)
+    xh, z, Bm, Cm, dt, decay = _proj(p, x, cfg)
+    xh1 = xh[:, 0].astype(jnp.float32)                       # [B, H, P]
+    B1 = (Bm[:, 0].astype(jnp.float32) * dt[:, 0][..., None])  # [B, H, N]
+    C1 = Cm[:, 0].astype(jnp.float32)
+    h = state["h"] * decay[:, 0][..., None, None] + \
+        B1[..., :, None] * xh1[..., None, :]                 # [B, H, N, P]
+    y = jnp.einsum("bhn,bhnp->bhp", C1, h) + p["D"][None] * xh1
+    y = y.reshape(B, 1, H * P).astype(x.dtype)
+    out = (y * z.reshape(B, 1, H * P)) @ p["wo"]
+    return out, dict(state, h=h)

@@ -1,0 +1,166 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment, the conv frontend is a STUB: the model consumes
+precomputed frame embeddings ``frames: [B, F, d]`` (what the two conv1d
+layers would produce). Everything downstream — sinusoid-free learned
+positions, pre-LN encoder blocks (bidirectional), decoder blocks with causal
+self-attention + cross-attention, tied output head — is implemented.
+
+Layers are stacked + scanned like the decoder-only LM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.act_sharding import constrain
+from repro.models import layers as L
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": L.init_norm(cfg), "attn": L.init_attention(k1, cfg),
+            "norm2": L.init_norm(cfg), "mlp": L.init_mlp(k2, cfg)}
+
+
+def _logits(params, cfg: ModelConfig, x):
+    y = x @ params["embed"].T
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        y = jnp.where(pad_mask, y, jnp.asarray(L.NEG_INF, y.dtype))
+    return y
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": L.init_norm(cfg), "self_attn": L.init_attention(k1, cfg),
+            "norm_x": L.init_norm(cfg), "cross_attn": L.init_attention(k2, cfg),
+            "norm2": L.init_norm(cfg), "mlp": L.init_mlp(k3, cfg)}
+
+
+def init_whisper(key, cfg: ModelConfig, max_dec_len: int = 4096):
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    enc_layers = cfg.enc_layers or cfg.n_layers
+    enc_keys = jax.random.split(ks[0], enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_pos": L.dense_init(ks[2], (cfg.enc_frames, cfg.d_model), dt, scale=0.01),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": L.init_norm(cfg),
+        "embed": L.dense_init(ks[3], (cfg.padded_vocab, cfg.d_model), dt, scale=0.02),
+        "dec_pos": L.dense_init(ks[4], (max_dec_len, cfg.d_model), dt, scale=0.01),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "dec_norm": L.init_norm(cfg),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: [B, F, d] stubbed conv output -> memory [B, F, d]."""
+    B, F, _ = frames.shape
+    x = frames + params["enc_pos"][None, :F]
+    positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def step(carry, p):
+        y = carry + L.apply_attention(p["attn"], L.apply_norm(p["norm1"], carry, cfg),
+                                      cfg, positions, causal=False, use_rope=False)
+        y = y + L.apply_mlp(p["mlp"], L.apply_norm(p["norm2"], y, cfg), cfg)
+        return constrain(y, "btd"), 0.0
+
+    x, _ = jax.lax.scan(step, x, params["enc_blocks"])
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _dec_block(p, x, memory, cfg: ModelConfig, positions):
+    x = x + L.apply_attention(p["self_attn"], L.apply_norm(p["norm1"], x, cfg),
+                              cfg, positions, causal=True, use_rope=False)
+    x = x + L.apply_cross_attention(p["cross_attn"],
+                                    L.apply_norm(p["norm_x"], x, cfg), memory, cfg)
+    x = x + L.apply_mlp(p["mlp"], L.apply_norm(p["norm2"], x, cfg), cfg)
+    return x
+
+
+def forward(params, cfg: ModelConfig, frames, tokens, remat: bool = False):
+    """Teacher-forced decoder logits [B, T, V]."""
+    memory = encode(params, cfg, frames)
+    B, T = tokens.shape
+    x = params["embed"][tokens] + params["dec_pos"][None, :T]
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    body = _dec_block
+    if remat:
+        body = jax.checkpoint(_dec_block,
+                              policy=jax.checkpoint_policies.nothing_saveable,
+                              static_argnums=(3,))
+
+    def step(carry, p):
+        return constrain(body(p, carry, memory, cfg, positions), "btd"), 0.0
+
+    x, _ = jax.lax.scan(step, x, params["dec_blocks"])
+    x = L.apply_norm(params["dec_norm"], x, cfg)
+    return _logits(params, cfg, x)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: bool = True):
+    """batch: {"frames": [B,F,d], "tokens": [B,T], "labels": [B,T]}."""
+    logits = forward(params, cfg, batch["frames"], batch["tokens"], remat=remat)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    loss = ((logz - gold) * valid).sum() / jnp.maximum(valid.sum(), 1)
+    return loss, {"loss": loss, "tokens": valid.sum()}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_dec_cache(params, cfg: ModelConfig, frames, max_len: int):
+    """Encode once, precompute per-layer cross K/V, allocate self-attn cache."""
+    memory = encode(params, cfg, frames)
+    B = memory.shape[0]
+    F = memory.shape[1]
+    KV, hd = cfg.n_kv_heads, cfg.hd
+
+    def per_layer(carry, p):
+        ck = (memory @ p["cross_attn"]["wk"]).reshape(B, F, KV, hd)
+        cv = (memory @ p["cross_attn"]["wv"]).reshape(B, F, KV, hd)
+        return carry, (ck, cv)
+
+    _, (cross_k, cross_v) = jax.lax.scan(per_layer, 0, params["dec_blocks"])
+    self_cache = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[L.init_attention_cache(cfg, B, max_len) for _ in range(cfg.n_layers)])
+    return {"self": self_cache, "cross_k": cross_k, "cross_v": cross_v}
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache):
+    """token: [B] -> (logits [B, V], cache). One decoder step."""
+    B = token.shape[0]
+    idx = cache["self"]["idx"][0]
+    pos_embed = jax.lax.dynamic_slice_in_dim(params["dec_pos"], idx, 1, 0)  # [1, d]
+    x = params["embed"][token][:, None, :] + pos_embed[None]
+
+    def step(carry, scanned):
+        p, self_c, ck, cv = scanned
+        h = L.apply_norm(p["norm1"], carry, cfg)
+        y, new_self = L.apply_attention_decode(p["self_attn"], h, cfg, self_c)
+        x1 = carry + y
+        h = L.apply_norm(p["norm_x"], x1, cfg)
+        Hp, KVh, hd = cfg.n_heads_padded, cfg.n_kv_heads, cfg.hd
+        q = (h @ p["cross_attn"]["wq"] + p["cross_attn"].get("bq", 0)).reshape(B, 1, Hp, hd)
+        mask = jnp.ones((B, 1, ck.shape[1]), bool)
+        o = L._sdpa(q, ck, cv, mask, cfg.n_rep).reshape(B, 1, -1)
+        x2 = x1 + o @ p["cross_attn"]["wo"]
+        x3 = x2 + L.apply_mlp(p["mlp"], L.apply_norm(p["norm2"], x2, cfg), cfg)
+        return x3, new_self
+
+    x, new_self = jax.lax.scan(
+        step, x, (params["dec_blocks"], cache["self"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = L.apply_norm(params["dec_norm"], x, cfg)
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, dict(cache, self=new_self)

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import OptState, adamw, sgdm, make_optimizer
+from repro.optim.schedules import constant, cosine, wsd
+from repro.optim.compression import ef_int8_compress, ef_int8_decompress

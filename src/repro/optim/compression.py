@@ -1,0 +1,38 @@
+"""Error-feedback int8 gradient compression (beyond-paper distributed trick).
+
+For cross-pod all-reduces the wire cost dominates; int8 quantization with a
+per-leaf scale cuts it 4x vs f32 (2x vs bf16). Error feedback accumulates the
+quantization residual locally so the compression bias vanishes over steps
+(Karimireddy et al. 2019 style).
+
+Usage in the train step (pod axis only):
+    q, scales, residual = ef_int8_compress(grads, residual)
+    q = lax.psum(q, 'pod')                      # int32-accumulated all-reduce
+    grads = ef_int8_decompress(q, scales, n_pods)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_int8_compress(grads, residual):
+    """Returns (int8 pytree, f32 scales pytree, new residual pytree)."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_r = g32 - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat = jax.tree.map(one, grads, residual)
+    qs = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return qs, scales, res
+
+
+def ef_int8_decompress(qs, scales, n_ranks: int = 1):
+    """Inverse of compress after an integer all-reduce over n_ranks."""
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s / n_ranks, qs, scales)

@@ -1,0 +1,96 @@
+"""Optimizers: SGD-momentum (the paper's) and AdamW (modern LMs).
+
+Hand-rolled (optax is not installed here) but with the same functional
+(init, update) contract. Optimizer state mirrors the parameter pytree leaf
+for leaf, so the launcher can apply identical PartitionSpecs (ZeRO-style:
+state shards wherever the param shards).
+
+All state is f32 regardless of param dtype (bf16 params get an implicit f32
+master via the update arithmetic: p32 = p + delta computed in f32, cast back;
+for full master-weight semantics keep params f32 and cast in the step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_global_norm, tree_zeros_like
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any          # unused (zeros) for sgdm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable     # (state, grads, params, lr) -> (state, new_params)
+
+
+def _clip(grads, max_norm: Optional[float]):
+    if max_norm is None:
+        return grads
+    gn = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
+         clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return OptState(jnp.int32(0), tree_zeros_like(params, jnp.float32),
+                        jnp.float32(0.0))
+
+    def update(state, grads, params, lr):
+        grads = _clip(grads, clip_norm)
+        m = jax.tree.map(lambda mi, g: momentum * mi + g.astype(jnp.float32),
+                         state.m, grads)
+        def upd(p, mi):
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (mi + weight_decay * p32)
+            return p32.astype(p.dtype)
+        new_params = jax.tree.map(upd, params, m)
+        return OptState(state.step + 1, m, state.v), new_params
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        return OptState(jnp.int32(0), tree_zeros_like(params, jnp.float32),
+                        tree_zeros_like(params, jnp.float32))
+
+    def update(state, grads, params, lr):
+        grads = _clip(grads, clip_norm)
+        t = state.step + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state.v, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, mi, vi):
+            p32 = p.astype(jnp.float32)
+            step = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            p32 = p32 - lr * (step + weight_decay * p32)
+            return p32.astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return OptState(t, m, v), new_params
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgdm":
+        return sgdm(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise ValueError(name)

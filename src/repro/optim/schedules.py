@@ -1,0 +1,35 @@
+"""LR schedules: constant, cosine, and WSD (warmup-stable-decay — minicpm's
+schedule, arXiv:2404.06395). All are step -> lr callables usable under jit."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, min_ratio: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup: int = 0, decay_frac: float = 0.1,
+        min_ratio: float = 0.01):
+    """Warmup -> stable plateau -> fast exponential-ish linear decay tail."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        tail_prog = jnp.clip((step - decay_start) /
+                             jnp.maximum(total_steps - decay_start, 1), 0, 1)
+        tail = lr * (1 - (1 - min_ratio) * tail_prog)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < decay_start, jnp.float32(lr), tail))
+    return f

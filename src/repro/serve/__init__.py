@@ -1,0 +1,1 @@
+from repro.serve.engine import build_prefill, build_decode_step, ServeEngine

@@ -1,0 +1,60 @@
+"""Serving: jit'd prefill + decode step builders and a small batched engine.
+
+The dry-run lowers exactly these two functions for the inference shape cells
+(``prefill_32k`` lowers prefill; ``decode_32k`` / ``long_500k`` lower one
+decode step against a seq_len-deep cache, per the assignment).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm, whisper
+from repro.models.config import ModelConfig
+
+
+def build_prefill(cfg: ModelConfig, max_len: int) -> Callable:
+    if cfg.enc_dec:
+        def prefill_fn(params, batch):
+            # whisper "prefill": encode + prime decoder cache from the prompt
+            logits = whisper.forward(params, cfg, batch["frames"], batch["tokens"])
+            cache = whisper.init_dec_cache(params, cfg, batch["frames"], max_len)
+            return logits[:, -1], cache
+        return prefill_fn
+
+    def prefill_fn(params, batch):
+        return lm.prefill(params, cfg, batch["tokens"], max_len)
+    return prefill_fn
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    if cfg.enc_dec:
+        def decode_fn(params, token, cache):
+            return whisper.decode_step(params, cfg, token, cache)
+        return decode_fn
+
+    def decode_fn(params, token, cache):
+        return lm.decode_step(params, cfg, token, cache)
+    return decode_fn
+
+
+class ServeEngine:
+    """Minimal batched greedy-decoding engine over the jit'd steps."""
+
+    def __init__(self, params, cfg: ModelConfig, max_len: int):
+        self.params, self.cfg, self.max_len = params, cfg, max_len
+        self._prefill = jax.jit(build_prefill(cfg, max_len))
+        self._decode = jax.jit(build_decode_step(cfg))
+
+    def generate(self, batch, n_tokens: int) -> np.ndarray:
+        logits, cache = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = [np.asarray(tok)]
+        for _ in range(n_tokens - 1):
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)

@@ -1,0 +1,4 @@
+from repro.train.state import TrainState
+from repro.train.step import build_train_step, init_train_state
+from repro.train.checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint
+from repro.train.loop import LoopConfig, run_training

@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing.
+
+Properties needed at pod scale, all implemented here:
+
+* **atomic**: writes go to ``step_<N>.tmp`` and are renamed only after the
+  manifest is fsync'd — a killed writer never corrupts the latest checkpoint;
+* **self-describing**: one ``.npy`` per leaf keyed by its tree path + a JSON
+  manifest (shapes/dtypes/step/order-state) — restore does not need the
+  writing code version;
+* **resharding restore**: arrays are saved unsharded (fully replicated view)
+  and re-placed against the *current* template's sharding at load — restarts
+  may change pod count / mesh shape (elasticity);
+* **async**: ``CheckpointManager.save`` hands the host-transferred arrays to
+  a background thread so the train loop never blocks on disk;
+* **bounded**: keeps the newest ``keep`` checkpoints, deletes older ones;
+* **ordering state included**: GraB's sigma/epoch/step (host-side numpy) ride
+  in the manifest so data order resumes bit-exact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+             for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    names, leaves, _ = _leaf_paths(tree)
+    manifest = {"step": int(step), "leaves": [], "extra": _np_to_json(extra or {})}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({"path": name, "file": fname,
+                                   "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _np_to_json(d):
+    def conv(v):
+        if isinstance(v, np.ndarray):
+            return {"__ndarray__": v.tolist(), "dtype": str(v.dtype)}
+        if isinstance(v, (np.integer,)):
+            return int(v)
+        if isinstance(v, (np.floating,)):
+            return float(v)
+        if isinstance(v, dict):
+            return {k: conv(x) for k, x in v.items()}
+        return v
+    return conv(d)
+
+
+def _json_to_np(d):
+    def conv(v):
+        if isinstance(v, dict):
+            if "__ndarray__" in v:
+                return np.asarray(v["__ndarray__"], dtype=v["dtype"])
+            return {k: conv(x) for k, x in v.items()}
+        return v
+    return conv(d)
+
+
+def list_checkpoints(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
+            out.append((int(m.group(1)), os.path.join(directory, name)))
+    return sorted(out)
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None):
+    """Restore the newest (or a given) checkpoint into ``template``'s
+    structure, re-placing each leaf with the template leaf's sharding if it
+    has one (mesh/pod-count may differ from save time)."""
+    ckpts = list_checkpoints(directory)
+    if not ckpts:
+        return None, None, None
+    if step is None:
+        step, path = ckpts[-1]
+    else:
+        matches = [p for s, p in ckpts if s == step]
+        if not matches:
+            return None, None, None
+        path = matches[0]
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    names, leaves, treedef = _leaf_paths(template)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    new_leaves = []
+    for name, tmpl in zip(names, leaves):
+        entry = by_path[name]
+        arr = np.load(os.path.join(path, entry["file"]))
+        arr = arr.astype(np.dtype(str(tmpl.dtype))) if hasattr(tmpl, "dtype") else arr
+        sharding = getattr(tmpl, "sharding", None)
+        if sharding is not None and hasattr(sharding, "mesh"):
+            new_leaves.append(jax.device_put(arr, sharding))
+        else:
+            new_leaves.append(jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return tree, manifest["step"], _json_to_np(manifest.get("extra", {}))
+
+
+class CheckpointManager:
+    """Async save + retention. One background writer thread; saves are
+    serialized (a new save waits for the previous flush)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree, extra: Optional[dict] = None,
+             blocking: bool = False):
+        # Pull to host synchronously (cheap vs. training step; guarantees a
+        # consistent snapshot), write in the background.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+
+        def _write():
+            save_checkpoint(self.dir, step, host_tree, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template, step: Optional[int] = None):
+        return restore_checkpoint(self.dir, template, step)
+
+    def _gc(self):
+        ckpts = list_checkpoints(self.dir)
+        for _, path in ckpts[:-self.keep] if self.keep else []:
+            shutil.rmtree(path, ignore_errors=True)

@@ -1,0 +1,13 @@
+"""TrainState: params + optimizer + GraB state, one pytree, one sharding rule."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any                   # repro.optim.OptState
+    grab: Optional[Any]        # repro.core.grab.GrabState | None (RR et al.)
+    step: jax.Array

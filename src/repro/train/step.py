@@ -1,0 +1,102 @@
+"""Train-step builder: gradient-accumulation scan with **fused GraB**.
+
+The step consumes one *global batch* laid out as ``[n_micro, micro_bs, ...]``
+and scans over the microbatch axis:
+
+    for t in range(n_micro):                       # lax.scan
+        g_t   = grad(loss)(params, micro_t)        # needed for accumulation anyway
+        state, eps_t = grab_step(state, g_t)       # O(d) dot + sign + axpy
+        acc  += g_t
+
+so GraB's ordering signal costs **zero extra gradient computations** — the
+paper's §6 gradient-accumulation workaround as a first-class systems feature.
+The per-microbatch signs come back to the host, which reorders the global
+microbatch permutation for the next epoch (Algorithm 3 two-pointer).
+
+Under pjit the gradients inside the scan are already sharded; GraB's three
+state pytrees inherit the same specs, its inner product is a per-shard
+partial + scalar psum, and the single optimizer update happens *outside*
+the scan (one fused grad all-reduce per step, overlappable with the last
+microbatch's backward).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grab import GrabConfig, Sketch, grab_step, init_grab_state
+from repro.optim.optimizers import Optimizer
+from repro.train.state import TrainState
+from repro.utils.tree import tree_zeros_like
+
+
+def build_train_step(loss_fn: Callable, optimizer: Optimizer,
+                     lr_schedule: Callable,
+                     grab_cfg: Optional[GrabConfig] = None,
+                     n_micro_per_epoch: int = 1,
+                     sketch: Optional[Sketch] = None,
+                     constrain_grads: Optional[Callable] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    loss_fn(params, micro_batch) -> (loss, metrics_dict).
+    batch: pytree with a leading ``[n_micro, ...]`` axis on every leaf.
+    If ``grab_cfg`` is None the step is a plain accumulate-and-apply (used
+    for RR/SO/FlipFlop — identical compute, no balancing).
+    Output metrics include ``signs: [n_micro]`` (+1/-1; zeros when GraB off).
+
+    ``constrain_grads``: optional tree->tree applying param PartitionSpecs
+    (with_sharding_constraint) to gradient-shaped pytrees. Without it, XLA's
+    propagation can keep the f32 grad accumulator and GraB state *unsharded*
+    through the microbatch scan — observed as 7 GiB-per-tensor temps on the
+    256-chip dry-run. The launcher always passes this under pjit.
+    """
+    pin = constrain_grads or (lambda t: t)
+
+    def pin_grab(gs):
+        if gs is None or grab_cfg is None:
+            return gs
+        s = gs.s if grab_cfg.sketch_dim > 0 else pin(gs.s)
+        return gs._replace(s=s, m_prev=pin(gs.m_prev), m_acc=pin(gs.m_acc))
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        grad_fn = jax.value_and_grad(lambda p, mb: loss_fn(p, mb), has_aux=True)
+
+        def micro(carry, mb):
+            acc, grab_state = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            grads = pin(grads)
+            if grab_cfg is not None:
+                grab_state, eps = grab_step(grab_state, grads,
+                                            n_micro_per_epoch, grab_cfg, sketch)
+                grab_state = pin_grab(grab_state)
+            else:
+                eps = jnp.int32(0)
+            acc = pin(jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                   acc, grads))
+            return (acc, grab_state), (loss, eps)
+
+        acc0 = pin(tree_zeros_like(params, jnp.float32))
+        (acc, grab_state), (losses, signs) = jax.lax.scan(
+            micro, (acc0, pin_grab(state.grab)), batch)
+
+        n_micro = losses.shape[0]
+        grads = jax.tree.map(lambda a: a / n_micro, acc)
+        lr = lr_schedule(state.step)
+        opt_state, params = optimizer.update(state.opt, grads, params, lr)
+        new_state = TrainState(params=params, opt=opt_state, grab=grab_state,
+                               step=state.step + 1)
+        metrics = {"loss": losses.mean(), "signs": signs, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(params, optimizer: Optimizer,
+                     grab_cfg: Optional[GrabConfig] = None) -> TrainState:
+    grab = init_grab_state(params, grab_cfg) if grab_cfg is not None else None
+    return TrainState(params=params, opt=optimizer.init(params), grab=grab,
+                      step=jnp.int32(0))

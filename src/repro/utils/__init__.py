@@ -1,0 +1,10 @@
+from repro.utils.tree import (
+    tree_dot,
+    tree_add,
+    tree_scale,
+    tree_axpy,
+    tree_zeros_like,
+    tree_global_norm,
+    param_count,
+    flatten_to_vector,
+)

@@ -1,0 +1,60 @@
+"""Pytree arithmetic helpers used by GraB state machines and optimizers.
+
+All helpers are pure and jit-safe; they operate leaf-wise so sharded pytrees
+keep their shardings (the scalar reductions become per-shard partials + psum
+under pjit automatically).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_dot(a, b):
+    """Global inner product <a, b> across all leaves (f32 accumulation).
+
+    Elementwise-multiply + full reduce, NOT jnp.vdot: vdot ravels its inputs
+    to 1-D, and a 1-D reshape of a 2D-sharded tensor forces XLA to
+    materialize the full array on every device (observed: 7 GiB per weight
+    per microbatch on the 256-chip mesh). The elementwise form keeps the
+    operand sharding and lowers to per-shard partials + one scalar psum.
+    """
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)),
+        a, b))
+    return jnp.sum(jnp.stack(leaves)) if leaves else jnp.float32(0.0)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, c):
+    return jax.tree.map(lambda x: x * c, a)
+
+
+def tree_axpy(c, x, y):
+    """y + c * x, leafwise. c may be a traced scalar."""
+    return jax.tree.map(lambda xi, yi: yi + c * xi, x, y)
+
+
+def tree_zeros_like(a, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), a)
+
+
+def tree_global_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def flatten_to_vector(tree):
+    """Concatenate all leaves into one f32 vector (small models only)."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([x.reshape(-1).astype(jnp.float32) for x in leaves])

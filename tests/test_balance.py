@@ -1,0 +1,67 @@
+"""Unit + property tests for the sign balancers (Alg. 5 / Alg. 6)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import (alweiss_sign, balance_sequence,
+                                deterministic_sign, tree_balance_step)
+
+
+def test_deterministic_sign_matches_norm_comparison():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        s = rng.normal(size=16)
+        z = rng.normal(size=16)
+        eps = int(deterministic_sign(jnp.float32(np.dot(s, z))))
+        plus, minus = np.linalg.norm(s + z), np.linalg.norm(s - z)
+        expect = 1 if plus < minus else (-1 if minus < plus else 1)
+        assert eps == expect
+
+
+def test_alweiss_probabilities_bias():
+    # strongly positive <s,z> must bias towards eps=-1
+    key = jax.random.PRNGKey(0)
+    dots = jnp.full((2000,), 20.0)
+    keys = jax.random.split(key, 2000)
+    eps = jax.vmap(lambda d, k: alweiss_sign(d, jnp.float32(30.0), k))(dots, keys)
+    frac_minus = float((eps == -1).mean())
+    assert frac_minus > 0.75
+
+
+def test_balance_sequence_bounds_prefix_sums():
+    rng = np.random.default_rng(1)
+    z = rng.normal(size=(512, 32)).astype(np.float32)
+    z /= np.linalg.norm(z, axis=1, keepdims=True)       # normalize ||z||<=1
+    signs, _ = balance_sequence(jnp.asarray(z))
+    signed_prefix = np.cumsum(np.asarray(signs)[:, None] * z, axis=0)
+    balanced = np.abs(signed_prefix).max()
+    unsigned_prefix = np.cumsum(z, axis=0)
+    assert balanced < 0.5 * np.abs(unsigned_prefix).max()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 64), d=st.integers(1, 33), seed=st.integers(0, 2**20))
+def test_balance_sequence_signs_valid(n, d, seed):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(n, d)).astype(np.float32)
+    signs, s = balance_sequence(jnp.asarray(z))
+    assert set(np.unique(np.asarray(signs))) <= {-1, 1}
+    # final sum equals sum of signed vectors
+    np.testing.assert_allclose(np.asarray(s),
+                               (np.asarray(signs)[:, None] * z).sum(0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tree_balance_step_equals_vector_form():
+    rng = np.random.default_rng(2)
+    s_vec = rng.normal(size=24).astype(np.float32)
+    z_vec = rng.normal(size=24).astype(np.float32)
+    s_tree = {"a": jnp.asarray(s_vec[:8]), "b": jnp.asarray(s_vec[8:].reshape(4, 4))}
+    z_tree = {"a": jnp.asarray(z_vec[:8]), "b": jnp.asarray(z_vec[8:].reshape(4, 4))}
+    new_s, eps = tree_balance_step(s_tree, z_tree)
+    expect = int(deterministic_sign(jnp.float32(np.dot(s_vec, z_vec))))
+    assert int(eps) == expect
+    np.testing.assert_allclose(np.asarray(new_s["a"]),
+                               s_vec[:8] + expect * z_vec[:8], rtol=1e-5)

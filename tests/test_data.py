@@ -1,0 +1,66 @@
+"""Data pipeline: determinism, host sharding, permutation contract."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.orderings import make_policy
+from repro.data.loader import PermutedLoader
+from repro.data.synthetic import SyntheticTextDataset
+
+
+def test_dataset_examples_are_pure_functions_of_index():
+    a = SyntheticTextDataset(16, 32, 256, seed=3).example(7)
+    b = SyntheticTextDataset(16, 32, 256, seed=3).example(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticTextDataset(16, 32, 256, seed=4).example(7)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_next_tokens():
+    ex = SyntheticTextDataset(4, 64, 128, seed=0).example(0)
+    # label[t] must be token[t+1]'s source stream: check via re-generation
+    ex2 = SyntheticTextDataset(4, 64, 128, seed=0).example(0)
+    np.testing.assert_array_equal(ex["labels"][:-1], ex2["tokens"][1:])
+
+
+def test_loader_respects_permutation():
+    ds = SyntheticTextDataset(32, 8, 64, seed=0)
+    policy = make_policy("so", 8, seed=1)          # 8 microbatches of 4
+    loader = PermutedLoader(ds, policy, micro_size=4)
+    sigma = policy.epoch_order(0)
+    idx0 = loader.micro_indices(0, 0)
+    np.testing.assert_array_equal(
+        idx0, np.arange(sigma[0] * 4, (sigma[0] + 1) * 4))
+
+
+def test_host_sharding_partitions_examples():
+    ds = SyntheticTextDataset(32, 8, 64, seed=0)
+    policy = make_policy("so", 8, seed=1)
+    loaders = [PermutedLoader(ds, policy, 4, host_id=h, n_hosts=2)
+               for h in range(2)]
+    rows = [l.load_micro(0, 3)["tokens"] for l in loaders]
+    full = PermutedLoader(ds, policy, 4).load_micro(0, 3)["tokens"]
+    # interleaved union reconstructs the full microbatch
+    assert rows[0].shape[0] + rows[1].shape[0] == full.shape[0]
+    np.testing.assert_array_equal(np.sort(np.vstack(rows), axis=0),
+                                  np.sort(full, axis=0))
+
+
+def test_prefetching_epoch_iterates_all_steps():
+    ds = SyntheticTextDataset(32, 8, 64, seed=0)
+    policy = make_policy("rr", 8, seed=0)
+    loader = PermutedLoader(ds, policy, 4)
+    steps = [s for s, _ in loader.epoch(0)]
+    assert steps == list(range(8))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 16, 32]), micro=st.sampled_from([2, 4, 8]),
+       epoch=st.integers(0, 3))
+def test_every_example_seen_once_per_epoch(n, micro, epoch):
+    ds = SyntheticTextDataset(n, 4, 32, seed=0)
+    policy = make_policy("rr", n // micro, seed=0)
+    loader = PermutedLoader(ds, policy, micro)
+    seen = np.concatenate([loader.micro_indices(epoch, s)
+                           for s in range(n // micro)])
+    assert sorted(seen.tolist()) == list(range(n))

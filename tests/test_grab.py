@@ -1,0 +1,87 @@
+"""GraB state-machine tests (Algorithm 4 semantics)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.balance import balance_sequence
+from repro.core.grab import (GrabConfig, grab_epoch_end, grab_step,
+                             init_grab_state, make_sketch)
+from repro.core.herding import reorder_from_signs
+
+
+def _tree(vec):
+    return {"w": jnp.asarray(vec[:12].reshape(3, 4)), "b": jnp.asarray(vec[12:])}
+
+
+def test_grab_step_centers_with_stale_mean_and_accumulates():
+    cfg = GrabConfig()
+    rng = np.random.default_rng(0)
+    g1 = rng.normal(size=16).astype(np.float32)
+    st = init_grab_state(_tree(g1), cfg)
+    st, eps1 = grab_step(st, _tree(g1), n_per_epoch=2, cfg=cfg)
+    # epoch 1: stale mean is zero, so s == eps1 * g1
+    flat_s = np.concatenate([np.asarray(st.s["w"]).ravel(), np.asarray(st.s["b"])])
+    np.testing.assert_allclose(flat_s, int(eps1) * g1, rtol=1e-5)
+    g2 = rng.normal(size=16).astype(np.float32)
+    st, _ = grab_step(st, _tree(g2), n_per_epoch=2, cfg=cfg)
+    st = grab_epoch_end(st, cfg)
+    # m_prev now holds mean of the epoch's gradients; s reset
+    flat_m = np.concatenate([np.asarray(st.m_prev["w"]).ravel(),
+                             np.asarray(st.m_prev["b"])])
+    np.testing.assert_allclose(flat_m, (g1 + g2) / 2, rtol=1e-5)
+    assert float(jnp.abs(st.s["w"]).max()) == 0.0
+
+
+def test_grab_matches_balance_sequence_when_mean_known():
+    """With m_prev = true mean, a GraB epoch's signs equal Alg.5 balancing of
+    the centered vectors, and the host reorder equals Alg.3."""
+    cfg = GrabConfig()
+    rng = np.random.default_rng(1)
+    zs = rng.normal(size=(16, 16)).astype(np.float32)
+    mean = zs.mean(0)
+
+    st = init_grab_state(_tree(zs[0]), cfg)
+    st = st._replace(m_prev=_tree(mean))
+    eps_grab = []
+    for t in range(16):
+        st, e = grab_step(st, _tree(zs[t]), n_per_epoch=16, cfg=cfg)
+        eps_grab.append(int(e))
+
+    signs_ref, _ = balance_sequence(jnp.asarray(zs - mean))
+    assert eps_grab == [int(x) for x in np.asarray(signs_ref)]
+
+    sigma = reorder_from_signs(np.arange(16), np.array(eps_grab))
+    assert sorted(sigma.tolist()) == list(range(16))
+
+
+def test_sketch_mode_uses_k_dims():
+    cfg = GrabConfig(sketch_dim=6)
+    tmpl = _tree(np.zeros(16, np.float32))
+    sk = make_sketch(tmpl, 6, seed=0)
+    st = init_grab_state(tmpl, cfg)
+    assert st.s.shape == (6,)
+    g = _tree(np.random.default_rng(0).normal(size=16).astype(np.float32))
+    st, eps = grab_step(st, g, n_per_epoch=4, cfg=cfg, sketch=sk)
+    assert int(eps) in (-1, 1)
+    assert float(jnp.abs(st.s).sum()) > 0
+
+
+def test_grab_step_is_jittable():
+    cfg = GrabConfig()
+    tmpl = _tree(np.zeros(16, np.float32))
+    st = init_grab_state(tmpl, cfg)
+    f = jax.jit(lambda s, g: grab_step(s, g, 4, cfg))
+    g = _tree(np.ones(16, np.float32))
+    st, eps = f(st, g)
+    st, eps = f(st, g)
+    assert int(st.t) == 2
+
+
+def test_alweiss_grab_runs():
+    cfg = GrabConfig(balancer="alweiss", alweiss_c=10.0)
+    tmpl = _tree(np.zeros(16, np.float32))
+    st = init_grab_state(tmpl, cfg)
+    g = _tree(np.random.default_rng(2).normal(size=16).astype(np.float32))
+    st, eps = grab_step(st, g, 4, cfg)
+    assert int(eps) in (-1, 1)

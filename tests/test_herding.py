@@ -1,0 +1,63 @@
+"""Herding framework tests: objective, greedy failure (Statement 1),
+balance-then-reorder convergence (Theorem 2 behavior)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.herding import (adversarial_vectors, greedy_order,
+                                herd_offline, herding_objective,
+                                reorder_from_signs)
+
+
+def test_greedy_adversarial_statement1():
+    """Statement 1: greedy (uncentered, as in the App. B.1 proof) suffers
+    Omega(n); a random permutation stays O(sqrt(n))."""
+    n = 128
+    zs = adversarial_vectors(n)
+    greedy = greedy_order(zs, center=False)
+    rng = np.random.default_rng(0)
+    obj_g = float(herding_objective(jnp.asarray(zs), jnp.asarray(greedy), ord=2))
+    obj_r = np.median([
+        float(herding_objective(jnp.asarray(zs),
+                                jnp.asarray(rng.permutation(n)), ord=2))
+        for _ in range(5)])
+    assert obj_g > 0.5 * n            # Omega(n)
+    assert obj_r < 4.0 * np.sqrt(n)   # O(sqrt n)
+    assert obj_g > 3 * obj_r
+
+
+def test_greedy_beats_random_on_gaussians():
+    rng = np.random.default_rng(1)
+    zs = rng.normal(size=(128, 8)).astype(np.float32)
+    sigma = greedy_order(zs)
+    obj_g = float(herding_objective(jnp.asarray(zs), jnp.asarray(sigma), ord=2))
+    obj_r = float(herding_objective(jnp.asarray(zs),
+                                    jnp.asarray(rng.permutation(128)), ord=2))
+    assert obj_g < obj_r
+
+
+def test_herd_offline_reduces_objective():
+    rng = np.random.default_rng(2)
+    zs = rng.normal(size=(256, 16)).astype(np.float32)
+    base = float(herding_objective(jnp.asarray(zs), ord=np.inf))
+    sigma = herd_offline(zs, epochs=6)
+    after = float(herding_objective(jnp.asarray(zs), jnp.asarray(sigma),
+                                    ord=np.inf))
+    assert after < 0.6 * base
+    assert sorted(sigma.tolist()) == list(range(256))
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 128), seed=st.integers(0, 2**20))
+def test_reorder_from_signs_is_permutation(n, seed):
+    rng = np.random.default_rng(seed)
+    sigma = rng.permutation(n)
+    signs = rng.choice([-1, 1], size=n)
+    new = reorder_from_signs(sigma, signs)
+    assert sorted(new.tolist()) == sorted(sigma.tolist())
+    # positives keep order at the front, negatives reversed at the back
+    pos = sigma[signs > 0]
+    assert np.array_equal(new[: len(pos)], pos)
+    neg = sigma[signs < 0]
+    assert np.array_equal(new[len(pos):], neg[::-1])

@@ -1,0 +1,131 @@
+"""Training substrate: fused-GraB step, loop, checkpoint/restart."""
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.grab import GrabConfig
+from repro.models.paper_models import logreg_init, logreg_loss
+from repro.optim import adamw, constant, sgdm
+from repro.train import (CheckpointManager, LoopConfig, build_train_step,
+                         init_train_state, run_training)
+from repro.data.synthetic import synthetic_classification
+
+
+class ClsDataset:
+    def __init__(self, x, y):
+        self.x, self.y = x, y
+
+    def __len__(self):
+        return len(self.x)
+
+    def batch(self, idx):
+        return {"x": self.x[idx], "y": self.y[idx]}
+
+
+def _setup(n=128, d=16):
+    x, y = synthetic_classification(n, d, seed=0)
+    params = logreg_init(jax.random.PRNGKey(0), d, 10)
+    loss_fn = lambda p, mb: (logreg_loss(p, mb), {})
+    return ClsDataset(x, y), params, loss_fn
+
+
+def test_train_step_signs_and_loss():
+    ds, params, loss_fn = _setup()
+    cfg = GrabConfig()
+    step = jax.jit(build_train_step(loss_fn, sgdm(0.9), constant(0.05),
+                                    cfg, n_micro_per_epoch=16))
+    state = init_train_state(params, sgdm(0.9), cfg)
+    batch = {"x": ds.x[:32].reshape(8, 4, -1), "y": ds.y[:32].reshape(8, 4)}
+    state, metrics = step(state, batch)
+    assert metrics["signs"].shape == (8,)
+    assert set(np.unique(np.asarray(metrics["signs"]))) <= {-1, 1}
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state.step) == 1
+
+
+def test_grab_state_none_for_rr():
+    ds, params, loss_fn = _setup()
+    step = jax.jit(build_train_step(loss_fn, sgdm(0.9), constant(0.05),
+                                    None, n_micro_per_epoch=16))
+    state = init_train_state(params, sgdm(0.9), None)
+    assert state.grab is None
+    batch = {"x": ds.x[:32].reshape(8, 4, -1), "y": ds.y[:32].reshape(8, 4)}
+    state, metrics = step(state, batch)
+    assert np.all(np.asarray(metrics["signs"]) == 0)
+
+
+@pytest.mark.parametrize("ordering", ["grab", "rr"])
+def test_loop_converges(ordering):
+    ds, params, loss_fn = _setup()
+    cfg = LoopConfig(epochs=4, n_micro=8, ordering=ordering, log_every=0)
+    state, hist = run_training(loss_fn, params, sgdm(0.9), constant(0.05),
+                               ds, 4, cfg)
+    assert hist[-1]["loss"] < 0.5 * hist[0]["loss"]
+
+
+def test_checkpoint_roundtrip_and_resume():
+    ds, params, loss_fn = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        cfg = LoopConfig(epochs=2, n_micro=8, ordering="grab",
+                         ckpt_dir=d, log_every=0)
+        state, hist = run_training(loss_fn, params, sgdm(0.9), constant(0.05),
+                                   ds, 4, cfg)
+        # restore equality
+        mgr = CheckpointManager(d)
+        restored, step, extra = mgr.restore(state)
+        assert step == int(state.step)
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), rtol=1e-6)
+        assert extra["epoch"] == 2
+        assert "sigma" in extra["order"]
+        # resume continues (epoch 2 -> 3) without re-running earlier epochs
+        cfg2 = LoopConfig(epochs=3, n_micro=8, ordering="grab",
+                          ckpt_dir=d, log_every=0)
+        state2, hist2 = run_training(loss_fn, params, sgdm(0.9),
+                                     constant(0.05), ds, 4, cfg2)
+        assert {h["epoch"] for h in hist2} == {2}
+
+
+def test_checkpoint_atomicity_keeps_latest():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(4.0)}
+        for s in (1, 2, 3):
+            mgr.save(s, tree, blocking=True)
+        from repro.train.checkpoint import list_checkpoints
+        assert [s for s, _ in list_checkpoints(d)] == [2, 3]
+
+
+def test_adamw_and_sgdm_reduce_quadratic():
+    for opt in (adamw(weight_decay=0.0), sgdm(0.9)):
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            state, params = opt.update(state, grads, params, 0.05)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_int8_error_feedback_compression():
+    from repro.optim.compression import ef_int8_compress, ef_int8_decompress
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=256), jnp.float32)}
+    residual = {"w": jnp.zeros(256, jnp.float32)}
+    # accumulated error over steps stays bounded (error feedback works)
+    acc_true = np.zeros(256)
+    acc_q = np.zeros(256)
+    for i in range(20):
+        q, scales, residual = ef_int8_compress(g, residual)
+        deq = ef_int8_decompress(q, scales)
+        acc_true += np.asarray(g["w"])
+        acc_q += np.asarray(deq["w"])
+    resid = np.abs(np.asarray(residual["w"])).max()
+    scale = float(scales["w"])
+    assert resid <= 2 * scale * 127  # residual bounded by quantization range
+    np.testing.assert_allclose(acc_q + np.asarray(residual["w"]), acc_true,
+                               rtol=1e-4, atol=1e-4)
