@@ -14,12 +14,24 @@ Two composable strategies for data-parallel meshes:
   traffic is O(k). One sign per global microbatch; the host permutes global
   microbatch ids. This is the pod-scale default because it piggybacks
   entirely on collectives the training step already performs.
+
+* CD-GraB coordination [Cooper et al. 2023] — :func:`coordinated_pair_signs`
+  is the "order server" collapsed into a deterministic scan: the W workers'
+  pair-difference vectors are balanced *sequentially in worker-index order*
+  against one shared running sum, which is what preserves the global herding
+  bound across data-parallel shards. On a real mesh,
+  :func:`mesh_pair_signs` all-gathers the sketched differences (W·k floats —
+  tiny next to the gradient all-reduce) and replays the same scan replicated
+  on every shard, so every shard derives identical signs with a single
+  collective and no server rank.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.core.balance import alweiss_sign, deterministic_sign
 
 
 def local_rank_signs(local_sums: jax.Array, local_zs: jax.Array,
@@ -55,3 +67,59 @@ def pairwise_difference(zs: jax.Array) -> jax.Array:
 def signs_from_pair_signs(pair_signs: jax.Array) -> jax.Array:
     """Expand per-pair signs to per-vector signs: pair sign e gives (+e, -e)."""
     return jnp.stack([pair_signs, -pair_signs], axis=1).reshape(-1)
+
+
+def coordinated_pair_signs(s: jax.Array, zs: jax.Array, *,
+                           kind: str = "deterministic", c: float = 30.0,
+                           key: jax.Array | None = None):
+    """CD-GraB server step: balance the W workers' pair-difference vectors
+    sequentially (worker-index order) against one *shared* running sum.
+
+    ``s``: [k] running sum; ``zs``: [W, k] this timestep's differences.
+    Returns (new_s [k], signs [W] in {-1, +1}). The scan is the whole
+    coordination: worker i's sign sees workers < i's contributions from the
+    same timestep, exactly as if a central server consumed the stream
+    (z_1^t, ..., z_W^t, z_1^{t+1}, ...).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def body(carry, z):
+        s_c, key_c = carry
+        dot = jnp.vdot(s_c, z)
+        if kind == "deterministic":
+            eps = deterministic_sign(dot)
+        elif kind == "alweiss":
+            key_c, sub = jax.random.split(key_c)
+            eps = alweiss_sign(dot, jnp.float32(c), sub)
+        else:
+            raise ValueError(f"unknown balancer kind: {kind!r}")
+        return (s_c + eps.astype(jnp.float32) * z, key_c), eps
+
+    (new_s, _), signs = jax.lax.scan(body, (s, key), zs)
+    return new_s, signs
+
+
+def mesh_pair_signs(s: jax.Array, z_local: jax.Array, mesh,
+                    data_axis: str = "data", *, kind: str = "deterministic",
+                    c: float = 30.0):
+    """Coordinated pair signs on a mesh: the tiny sign dataflow of CD-GraB.
+
+    ``z_local``: [W, k] sketched pair differences, sharded over ``data_axis``
+    (each shard holds its own workers' rows); ``s``: [k] replicated running
+    sum. Every shard all-gathers the W·k floats and replays the same
+    deterministic scan, so the outputs are bit-identical everywhere — one
+    collective, no server rank, nothing further to broadcast.
+
+    Returns (new_s [k] replicated, signs [W] replicated).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def fn(s_r, z_l):
+        zs = jax.lax.all_gather(z_l, data_axis, axis=0, tiled=True)
+        return coordinated_pair_signs(s_r, zs, kind=kind, c=c)
+
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(P(), P(data_axis, None)),
+                     out_specs=(P(), P()),
+                     check_rep=False)(s, z_local)

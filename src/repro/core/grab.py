@@ -194,9 +194,96 @@ def _grab_step_pair(state: GrabState, grad, cfg: GrabConfig,
     return new_state, eps
 
 
+def init_parallel_grab_state(grad_template, cfg: GrabConfig,
+                             n_workers: int) -> GrabState:
+    """CD-GraB state for W logical workers: one *shared* running sum (the
+    coordination), one pair stash per worker (a leading [W] axis on the
+    m_prev/m_acc pytrees — sharded over the data axis on a real mesh, see
+    ``launch.sharding.cd_grab_state_specs``)."""
+    assert cfg.pair_balance, "parallel GraB is the CD-GraB pair-balance mode"
+    assert n_workers >= 1
+    zeros = tree_zeros_like(grad_template, jnp.float32)
+    stash = jax.tree.map(
+        lambda z: jnp.zeros((n_workers,) + z.shape, jnp.float32),
+        grad_template)
+    if cfg.sketch_dim > 0:
+        s = jnp.zeros((cfg.sketch_dim,), jnp.float32)
+    else:
+        s = zeros
+    return GrabState(s=s, m_prev=stash, m_acc=stash,
+                     t=jnp.int32(0), key=jax.random.PRNGKey(cfg.seed))
+
+
+def grab_step_workers(state: GrabState, grads, cfg: GrabConfig,
+                      sketch: Optional[Sketch] = None):
+    """One CD-GraB inner iteration over W workers' gradients.
+
+    ``grads``: pytree whose leaves carry a leading [W] worker axis (worker
+    w's microbatch gradient in row w). Even timesteps stash; odd timesteps
+    balance the per-worker differences z_w = g_w^{t-1} - g_w^t sequentially
+    in worker-index order against the shared running sum (the
+    ``coordinated_pair_signs`` scan), which is what makes the signs globally
+    coherent rather than W independent balancing walks.
+
+    Returns (new_state, eps [W] in {-1, 0, +1}): zeros on even (stash)
+    steps, the pair signs on odd steps — the host expands them per worker
+    (``orderings.ParallelGrabOrder``). Like ``_grab_step_pair``, both
+    branches are computed and select'd; the balance scan is O(W·d) flops,
+    noise next to the W gradient computations the step already did.
+    """
+    from repro.core.distributed import coordinated_pair_signs
+
+    g32 = jax.tree.map(lambda x: x.astype(jnp.float32), grads)
+    n_workers = jax.tree.leaves(g32)[0].shape[0]
+    even = (state.t % 2) == 0
+
+    # stash branch: remember this timestep's gradients, emit no signs
+    st_stash = state._replace(m_acc=g32, t=state.t + 1)
+    eps_stash = jnp.zeros((n_workers,), jnp.int32)
+
+    # balance branch: per-worker differences, coordinated sequential signs
+    diffs = jax.tree.map(jnp.subtract, state.m_acc, g32)
+    key = state.key
+    if cfg.sketch_dim > 0:
+        assert sketch is not None, "sketch mode needs a Sketch"
+        zs = jax.vmap(sketch.apply)(diffs)          # [W, k]
+        if cfg.balancer == "alweiss":
+            key, sub = jax.random.split(key)
+        else:
+            sub = key
+        new_s, eps_bal = coordinated_pair_signs(
+            state.s, zs, kind=cfg.balancer, c=cfg.alweiss_c, key=sub)
+    else:
+        def one_worker(carry, z_w):
+            s_c, key_c = carry
+            if cfg.balancer == "alweiss":
+                key_c, sub = jax.random.split(key_c)
+                s_c, eps = tree_balance_step(s_c, z_w, kind="alweiss",
+                                             c=cfg.alweiss_c, key=sub)
+            else:
+                s_c, eps = tree_balance_step(s_c, z_w)
+            return (s_c, key_c), eps
+
+        (new_s, key), eps_bal = jax.lax.scan(
+            one_worker, (state.s, state.key), diffs)
+    st_bal = state._replace(s=new_s, key=key, t=state.t + 1)
+
+    new_state = jax.tree.map(lambda a, b: jnp.where(even, a, b),
+                             st_stash, st_bal)
+    eps = jnp.where(even, eps_stash, eps_bal.astype(jnp.int32))
+    return new_state, eps
+
+
 def expand_pair_signs(signs: np.ndarray) -> np.ndarray:
-    """[..., 0, e1, 0, e2, ...] -> per-element signs [e1, -e1, e2, -e2, ...]."""
-    signs = np.asarray(signs).reshape(-1)
+    """[..., 0, e1, 0, e2, ...] -> per-element signs [e1, -e1, e2, -e2, ...].
+
+    2D input [T, W] (per-timestep, per-worker — the CD-GraB layout) expands
+    each worker's column independently along time."""
+    signs = np.asarray(signs)
+    if signs.ndim == 2:
+        return np.stack([expand_pair_signs(signs[:, w])
+                         for w in range(signs.shape[1])], axis=1)
+    signs = signs.reshape(-1)
     assert signs.shape[0] % 2 == 0
     pair = signs[1::2]
     out = np.empty_like(signs)

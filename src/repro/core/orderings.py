@@ -11,6 +11,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.grab import expand_pair_signs
 from repro.core.herding import reorder_from_signs
 
 
@@ -24,7 +25,23 @@ class OrderPolicy:
     def epoch_order(self, epoch: int) -> np.ndarray:
         raise NotImplementedError
 
-    # GraB hook points (no-ops for static policies)
+    # GraB hook points (no-ops for static policies).
+    # record_step_signs buffers raw per-step device signs mid-epoch (so a
+    # mid-epoch checkpoint captures them); end_epoch consumes the buffer and
+    # commits the Alg.3 reorder; record_signs applies a full epoch's expanded
+    # signs in one shot (tests / offline drivers).
+    def record_step_signs(self, signs: np.ndarray) -> None:
+        pass
+
+    def end_epoch(self, epoch: int) -> None:
+        pass
+
+    def discard_pending(self) -> None:
+        """Drop buffered mid-epoch signs. Called on restore when the resume
+        granularity is the epoch: the loop replays the epoch from step 0 and
+        re-records every step, so restored partial buffers would double-count."""
+        pass
+
     def record_signs(self, epoch: int, signs: np.ndarray) -> None:
         pass
 
@@ -74,27 +91,133 @@ class FixedOrder(OrderPolicy):
 class GrabOrder(OrderPolicy):
     """GraB host side: sigma_{k+1} = Alg.3 reorder of sigma_k by this epoch's
     signs (identical to the two-pointer construction in Algorithm 4).
-    Epoch 0 starts from a random permutation (matches the paper's init)."""
+    Epoch 0 starts from a random permutation (matches the paper's init).
 
-    def __init__(self, n: int, seed: int = 0):
+    ``pair=True`` marks the device stream as pair-encoded (zeros on even
+    steps, pair signs on odd): ``end_epoch`` expands it to per-element signs
+    before the reorder."""
+
+    def __init__(self, n: int, seed: int = 0, pair: bool = False):
         super().__init__(n, seed)
         rng = np.random.default_rng((seed, 0))
         self.sigma = rng.permutation(n)
-        self._signs: Optional[np.ndarray] = None
+        self.pair = bool(pair)
+        self._pending: list = []
 
     def epoch_order(self, epoch: int) -> np.ndarray:
         return self.sigma
+
+    def record_step_signs(self, signs: np.ndarray) -> None:
+        self._pending.append(np.asarray(signs).reshape(-1))
+
+    def end_epoch(self, epoch: int) -> None:
+        if not self._pending:
+            return
+        sig = np.concatenate(self._pending)
+        self._pending = []
+        if self.pair:
+            sig = expand_pair_signs(sig)
+        self.record_signs(epoch, sig)
 
     def record_signs(self, epoch: int, signs: np.ndarray) -> None:
         signs = np.asarray(signs).reshape(-1)
         assert signs.shape[0] == self.n, (signs.shape, self.n)
         self.sigma = reorder_from_signs(self.sigma, signs)
 
+    def discard_pending(self) -> None:
+        self._pending = []
+
     def state_dict(self) -> dict:
-        return {"n": self.n, "seed": self.seed, "sigma": self.sigma.copy()}
+        pending = (np.concatenate(self._pending) if self._pending
+                   else np.zeros((0,), np.int64))
+        return {"n": self.n, "seed": self.seed, "sigma": self.sigma.copy(),
+                "pair": int(self.pair), "pending": pending}
 
     def load_state_dict(self, d: dict) -> None:
         self.sigma = np.asarray(d["sigma"], dtype=np.int64)
+        if "pair" in d:
+            self.pair = bool(d["pair"])
+        pending = np.asarray(d.get("pending", []))
+        self._pending = [pending] if pending.size else []
+
+
+class ParallelGrabOrder(OrderPolicy):
+    """CD-GraB coordinator [Cooper et al. 2023]: W logical workers, each
+    owning a contiguous shard of the n ordering units (worker w owns
+    [w·m, (w+1)·m), m = n/W).
+
+    The global schedule is *time-major*: at timestep t the W workers consume
+    slot t of their per-worker permutations, so ``epoch_order`` interleaves
+    ``sigma_w[t]`` as position t·W + w — exactly the stream order the device
+    side (``grab.grab_step_workers``) balances against the shared running
+    sum. At the epoch boundary the buffered per-step pair signs are expanded
+    per worker, the *global* interleaved sequence gets the Algorithm-3
+    two-pointer reorder, and each worker's next-epoch permutation is the
+    restriction of that globally balanced order to its own shard — relative
+    global positions are preserved, data never moves between workers.
+
+    W=1 degenerates to ``GrabOrder(pair=True)`` bit-for-bit (same init
+    permutation, same reorder).
+    """
+
+    def __init__(self, n: int, workers: int = 1, seed: int = 0):
+        super().__init__(n, seed)
+        w = int(workers)
+        assert w >= 1 and n % w == 0, f"n={n} must shard over {w} workers"
+        self.workers = w
+        self.m = n // w
+        assert self.m % 2 == 0, \
+            f"pair balancing needs an even per-worker stream (m={self.m})"
+        rng = np.random.default_rng((seed, 0))
+        init = rng.permutation(n)
+        # per-worker permutations: the global init order restricted per shard
+        self.sigmas = np.stack([init[init // self.m == w_]
+                                for w_ in range(w)])       # [W, m]
+        self._pending: list = []                           # [T_chunk, W] chunks
+
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        # time-major interleave: position t*W + w holds sigma_w[t]
+        return self.sigmas.T.reshape(-1).astype(np.int64)
+
+    def record_step_signs(self, signs: np.ndarray) -> None:
+        signs = np.asarray(signs)
+        self._pending.append(signs.reshape(-1, self.workers))
+
+    def end_epoch(self, epoch: int) -> None:
+        if not self._pending:
+            return
+        raw = np.concatenate(self._pending, axis=0)        # [m, W]
+        self._pending = []
+        assert raw.shape == (self.m, self.workers), \
+            (raw.shape, self.m, self.workers)
+        self.record_signs(epoch, expand_pair_signs(raw).reshape(-1))
+
+    def record_signs(self, epoch: int, signs: np.ndarray) -> None:
+        """Apply a full epoch of *expanded* per-element signs, laid out in
+        the time-major global stream order of ``epoch_order``."""
+        signs = np.asarray(signs).reshape(-1)
+        assert signs.shape[0] == self.n, (signs.shape, self.n)
+        balanced = reorder_from_signs(self.epoch_order(epoch), signs)
+        owner = balanced // self.m
+        self.sigmas = np.stack([balanced[owner == w]
+                                for w in range(self.workers)])
+
+    def discard_pending(self) -> None:
+        self._pending = []
+
+    def state_dict(self) -> dict:
+        pending = (np.concatenate(self._pending, axis=0) if self._pending
+                   else np.zeros((0, self.workers), np.int64))
+        return {"n": self.n, "seed": self.seed, "workers": self.workers,
+                "sigmas": self.sigmas.copy(), "pending": pending}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.sigmas = np.asarray(d["sigmas"], dtype=np.int64)
+        self.workers = int(d.get("workers", self.sigmas.shape[0]))
+        self.m = self.sigmas.shape[1]
+        pending = np.asarray(d.get("pending", []))
+        self._pending = ([pending.reshape(-1, self.workers)]
+                         if pending.size else [])
 
 
 def make_policy(name: str, n: int, seed: int = 0, **kw) -> OrderPolicy:
@@ -106,5 +229,8 @@ def make_policy(name: str, n: int, seed: int = 0, **kw) -> OrderPolicy:
     if name == "flipflop":
         return FlipFlop(n, seed)
     if name == "grab":
-        return GrabOrder(n, seed)
+        return GrabOrder(n, seed, pair=bool(kw.get("pair", False)))
+    if name in ("cd-grab", "cd_grab", "cdgrab"):
+        return ParallelGrabOrder(n, workers=int(kw.get("workers", 1)),
+                                 seed=seed)
     raise ValueError(f"unknown ordering policy {name!r}")

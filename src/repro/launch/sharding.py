@@ -143,6 +143,37 @@ def state_specs(state, policy: ShardPolicy):
     return jax.tree_util.tree_map_with_path(spec, state)
 
 
+def cd_grab_state_specs(state, policy: ShardPolicy, *,
+                        data_axis: str = "data"):
+    """Specs for a TrainState carrying CD-GraB's W-worker GraB state.
+
+    The pair stash (``grab/m_prev``, ``grab/m_acc``) has a leading worker
+    axis: row w is worker w's stashed gradient, so it shards over the data
+    axis — each DP shard keeps only its own workers' stash, and the only
+    cross-shard ordering traffic is the W-sign all-gather in
+    ``core.distributed.mesh_pair_signs`` (W·k floats per pair step).
+    The shared running sum and everything else follow :func:`state_specs`.
+    """
+    def is_stash(path):
+        p = path_str(path)
+        return p.startswith("grab/m_prev") or p.startswith("grab/m_acc")
+
+    # rule-match the stash against its per-worker (unstacked) shape, then
+    # prepend the worker axis — dropping any data-axis entry the FSDP rules
+    # put on the inner dims (a mesh axis may appear only once per spec, and
+    # the worker axis is the stash's data-parallel dimension)
+    slim = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: leaf[0] if is_stash(path) else leaf, state)
+    base = state_specs(slim, policy)
+
+    def stack(spec):
+        return P(data_axis, *(None if ax == data_axis else ax for ax in spec))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, spec: stack(spec) if is_stash(path) else spec,
+        base, is_leaf=lambda x: isinstance(x, P))
+
+
 def batch_specs(batch_shapes, mesh):
     """Shard every leaf's batch dim over the data axes.
 

@@ -27,7 +27,8 @@ from repro.train.step import build_train_step, init_train_state
 class LoopConfig:
     epochs: int = 5
     n_micro: int = 8              # microbatches per optimizer step
-    ordering: str = "grab"        # grab | rr | so | flipflop
+    ordering: str = "grab"        # grab | cd-grab | rr | so | flipflop
+    workers: int = 1              # cd-grab only: W logical DP workers
     ckpt_dir: Optional[str] = None
     ckpt_every_steps: int = 0     # 0 = once per epoch
     keep_ckpts: int = 3
@@ -50,21 +51,35 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
         (n_micro_total, loop_cfg.n_micro)
     steps_per_epoch = n_micro_total // loop_cfg.n_micro
 
-    use_grab = loop_cfg.ordering == "grab"
+    cd_grab = loop_cfg.ordering in ("cd-grab", "cd_grab", "cdgrab")
+    use_grab = loop_cfg.ordering == "grab" or cd_grab
+    n_workers = loop_cfg.workers if cd_grab else 1
     if use_grab and grab_cfg is None:
-        grab_cfg = GrabConfig()
+        grab_cfg = GrabConfig(pair_balance=cd_grab)
     if not use_grab:
         grab_cfg = None
+    if cd_grab:
+        if not grab_cfg.pair_balance:
+            grab_cfg = dataclasses.replace(grab_cfg, pair_balance=True)
+        assert loop_cfg.n_micro % n_workers == 0, \
+            (loop_cfg.n_micro, n_workers)
+        assert (n_micro_total // n_workers) % 2 == 0, \
+            "pair balancing needs an even per-worker stream"
 
+    policy_kw = {}
+    if cd_grab:
+        policy_kw["workers"] = n_workers
+    elif use_grab:
+        policy_kw["pair"] = grab_cfg.pair_balance
     policy: OrderPolicy = make_policy(loop_cfg.ordering, n_micro_total,
-                                      seed=loop_cfg.seed)
+                                      seed=loop_cfg.seed, **policy_kw)
     loader = PermutedLoader(dataset, policy, micro_size)
 
     step_fn = jax.jit(build_train_step(
         loss_fn, optimizer, lr_schedule, grab_cfg,
-        n_micro_per_epoch=n_micro_total))
+        n_micro_per_epoch=n_micro_total, n_workers=n_workers))
 
-    state = init_train_state(params, optimizer, grab_cfg)
+    state = init_train_state(params, optimizer, grab_cfg, n_workers=n_workers)
     start_epoch = 0
     manager = None
     if loop_cfg.ckpt_dir:
@@ -74,13 +89,16 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
             state = restored
             start_epoch = int(extra.get("epoch", 0))
             policy.load_state_dict(extra.get("order", {}))
+            # resume granularity is the epoch: a mid-epoch checkpoint's epoch
+            # replays from step 0 and re-records all its signs, so any
+            # restored partial buffer would double-count
+            policy.discard_pending()
             print(f"[loop] resumed from step {step}, epoch {start_epoch}")
 
     from repro.core.grab import grab_epoch_end  # local import to avoid cycle
 
     history = []
     for epoch in range(start_epoch, loop_cfg.epochs):
-        epoch_signs = []
         t0 = time.time()
         micro_iter = loader.epoch(epoch)
         for step_i in range(steps_per_epoch):
@@ -91,7 +109,9 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
             batch = {k: np.stack([m[k] for m in micros]) for k in micros[0]}
             state, metrics = step_fn(state, batch)
             if use_grab:
-                epoch_signs.append(np.asarray(metrics["signs"]))
+                # buffered on the policy so a mid-epoch checkpoint carries
+                # the pending signs ([T, W] per step for cd-grab)
+                policy.record_step_signs(np.asarray(metrics["signs"]))
             loss = float(metrics["loss"])
             history.append({"epoch": epoch, "step": int(state.step),
                             "loss": loss})
@@ -102,13 +122,10 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
                     and int(state.step) % loop_cfg.ckpt_every_steps == 0):
                 manager.save(int(state.step), state,
                              extra={"epoch": epoch, "order": policy.state_dict()})
-        # epoch boundary: hand signs to the policy (Alg. 3), roll GraB means
+        # epoch boundary: commit the Alg.3 reorder (cd-grab: the coordinated
+        # global two-pointer pass), roll GraB means
         if use_grab:
-            sig = np.concatenate(epoch_signs)
-            if grab_cfg.pair_balance:
-                from repro.core.grab import expand_pair_signs
-                sig = expand_pair_signs(sig)
-            policy.record_signs(epoch, sig)
+            policy.end_epoch(epoch)
             state = state._replace(grab=jax.jit(
                 lambda g: grab_epoch_end(g, grab_cfg))(state.grab))
         if manager:

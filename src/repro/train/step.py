@@ -27,7 +27,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.grab import GrabConfig, Sketch, grab_step, init_grab_state
+from repro.core.grab import (GrabConfig, Sketch, grab_step, grab_step_workers,
+                             init_grab_state, init_parallel_grab_state)
 from repro.optim.optimizers import Optimizer
 from repro.train.state import TrainState
 from repro.utils.tree import tree_zeros_like
@@ -38,7 +39,8 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
                      grab_cfg: Optional[GrabConfig] = None,
                      n_micro_per_epoch: int = 1,
                      sketch: Optional[Sketch] = None,
-                     constrain_grads: Optional[Callable] = None):
+                     constrain_grads: Optional[Callable] = None,
+                     n_workers: int = 1):
     """Returns train_step(state, batch) -> (state, metrics).
 
     loss_fn(params, micro_batch) -> (loss, metrics_dict).
@@ -47,18 +49,34 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
     for RR/SO/FlipFlop — identical compute, no balancing).
     Output metrics include ``signs: [n_micro]`` (+1/-1; zeros when GraB off).
 
+    ``n_workers > 1`` is the CD-GraB path: the ``n_micro`` microbatches are
+    regrouped as [T, W, ...] (T timesteps of W per-worker microbatches, the
+    time-major layout ``ParallelGrabOrder`` schedules), per-worker gradients
+    come from a vmap over the worker axis, and the pair signs are
+    coordinated through the shared running sum in
+    ``grab.grab_step_workers``. ``signs`` then has shape [T, W]. Requires
+    ``grab_cfg.pair_balance`` and ``n_micro % n_workers == 0``.
+
     ``constrain_grads``: optional tree->tree applying param PartitionSpecs
     (with_sharding_constraint) to gradient-shaped pytrees. Without it, XLA's
     propagation can keep the f32 grad accumulator and GraB state *unsharded*
     through the microbatch scan — observed as 7 GiB-per-tensor temps on the
-    256-chip dry-run. The launcher always passes this under pjit.
+    256-chip dry-run. The launcher always passes this under pjit. (The
+    worker-stacked stash of the CD-GraB path is pinned by the launcher via
+    ``launch.sharding.cd_grab_state_specs`` instead — its leading axis is
+    not gradient-shaped.)
     """
     pin = constrain_grads or (lambda t: t)
+    if n_workers > 1:
+        assert grab_cfg is not None and grab_cfg.pair_balance, \
+            "multi-worker ordering is the CD-GraB pair-balance mode"
 
     def pin_grab(gs):
         if gs is None or grab_cfg is None:
             return gs
         s = gs.s if grab_cfg.sketch_dim > 0 else pin(gs.s)
+        if n_workers > 1:          # stash carries a worker axis; see above
+            return gs._replace(s=s)
         return gs._replace(s=s, m_prev=pin(gs.m_prev), m_acc=pin(gs.m_acc))
 
     def train_step(state: TrainState, batch):
@@ -79,12 +97,32 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
                                    acc, grads))
             return (acc, grab_state), (loss, eps)
 
-        acc0 = pin(tree_zeros_like(params, jnp.float32))
-        (acc, grab_state), (losses, signs) = jax.lax.scan(
-            micro, (acc0, pin_grab(state.grab)), batch)
+        def micro_workers(carry, mb_w):
+            # mb_w: [W, micro, ...] — one timestep of W per-worker batches
+            acc, grab_state = carry
+            (losses, metrics), grads = jax.vmap(
+                grad_fn, in_axes=(None, 0))(params, mb_w)
+            grab_state, eps = grab_step_workers(grab_state, grads,
+                                                grab_cfg, sketch)
+            grab_state = pin_grab(grab_state)
+            gmean = pin(jax.tree.map(
+                lambda g: g.astype(jnp.float32).mean(axis=0), grads))
+            acc = pin(jax.tree.map(jnp.add, acc, gmean))
+            return (acc, grab_state), (losses.mean(), eps)
 
-        n_micro = losses.shape[0]
-        grads = jax.tree.map(lambda a: a / n_micro, acc)
+        acc0 = pin(tree_zeros_like(params, jnp.float32))
+        if n_workers > 1:
+            batch_w = jax.tree.map(
+                lambda x: x.reshape((x.shape[0] // n_workers, n_workers)
+                                    + x.shape[1:]), batch)
+            (acc, grab_state), (losses, signs) = jax.lax.scan(
+                micro_workers, (acc0, pin_grab(state.grab)), batch_w)
+        else:
+            (acc, grab_state), (losses, signs) = jax.lax.scan(
+                micro, (acc0, pin_grab(state.grab)), batch)
+
+        n_steps = losses.shape[0]
+        grads = jax.tree.map(lambda a: a / n_steps, acc)
         lr = lr_schedule(state.step)
         opt_state, params = optimizer.update(state.opt, grads, params, lr)
         new_state = TrainState(params=params, opt=opt_state, grab=grab_state,
@@ -96,7 +134,13 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
 
 
 def init_train_state(params, optimizer: Optimizer,
-                     grab_cfg: Optional[GrabConfig] = None) -> TrainState:
-    grab = init_grab_state(params, grab_cfg) if grab_cfg is not None else None
+                     grab_cfg: Optional[GrabConfig] = None,
+                     n_workers: int = 1) -> TrainState:
+    if grab_cfg is None:
+        grab = None
+    elif n_workers > 1:
+        grab = init_parallel_grab_state(params, grab_cfg, n_workers)
+    else:
+        grab = init_grab_state(params, grab_cfg)
     return TrainState(params=params, opt=optimizer.init(params), grab=grab,
                       step=jnp.int32(0))

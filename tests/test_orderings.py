@@ -16,6 +16,15 @@ def test_policies_yield_permutations(name, n, seed, epoch):
     assert sorted(order.tolist()) == list(range(n))
 
 
+@settings(max_examples=30, deadline=None)
+@given(w=st.sampled_from([1, 2, 4, 8]), m=st.integers(1, 12),
+       seed=st.integers(0, 2**16), epoch=st.integers(0, 5))
+def test_cd_grab_policy_yields_permutations(w, m, seed, epoch):
+    p = make_policy("cd-grab", w * 2 * m, seed, workers=w)
+    order = p.epoch_order(epoch)
+    assert sorted(order.tolist()) == list(range(w * 2 * m))
+
+
 def test_rr_differs_across_epochs_so_does_not():
     rr = make_policy("rr", 64, 0)
     so = make_policy("so", 64, 0)

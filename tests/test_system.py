@@ -44,6 +44,7 @@ def _run(ordering: str, epochs: int, seed: int = 0, lr: float = 0.05):
     return state, [float(np.mean(v)) for _, v in sorted(per_epoch.items())]
 
 
+@pytest.mark.slow
 def test_grab_trains_faster_than_rr_on_convex_task():
     """Fig. 2a analogue (same LR, same init — the paper's in-place setting):
     in the non-interpolating regime GraB's mean epoch loss ends below RR's."""
