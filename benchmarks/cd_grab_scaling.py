@@ -15,11 +15,25 @@ Two measurements, both CPU-friendly:
    (`ordering="cd-grab"`) on the logistic-regression task of the
    convergence benchmark, mean train loss per epoch vs. RR.
 
-CSV rows: kind,W,epoch,value.
+3. **Wall-clock of the sign dataflow** (``--wallclock``): per W, the time of
+   one ``mesh_pair_signs`` invocation (the all-gather + replicated scan that
+   is CD-GraB's only extra collective) next to the full
+   ``grab_step_workers(mesh=...)`` device step it rides on, and their ratio
+   — the fraction of the ordering step the sign traffic could occupy if it
+   overlapped nothing. Runs on however many devices the process has
+   (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to force a real
+   multi-device CPU mesh; the W rows shard over it, so only W that are
+   multiples of N run — others are emitted as ``wallclock_skipped``).
+
+CSV rows: kind,W,epoch,value. Every run also emits ``BENCH_cd_grab.json``
+(``--json`` to relocate) with the same rows plus run metadata, so the perf
+trajectory is recorded per commit.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
 import numpy as np
 import jax
@@ -70,11 +84,62 @@ def run_herding(n: int, d: int, epochs: int, workers: tuple, seed: int):
     rng = np.random.default_rng(seed)
     zs = rng.normal(size=(n, d)).astype(np.float32)
     med, best = rr_bounds(zs)
-    print(f"rr_median,0,0,{med:.4f}")
-    print(f"rr_min,0,0,{best:.4f}")
+    rows = [("rr_median", 0, 0, med), ("rr_min", 0, 0, best)]
     for w in workers:
         for epoch, b in enumerate(coordinated_bounds(zs, w, epochs, seed)):
-            print(f"herding,{w},{epoch},{b:.4f}")
+            rows.append(("herding", w, epoch, b))
+    return rows
+
+
+def _time_us(fn, reps: int) -> float:
+    out = jax.block_until_ready(fn())          # warmup + compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run_wallclock(workers: tuple, d: int = 65_536, k: int = 256,
+                  reps: int = 30, seed: int = 0):
+    """Sign all-gather + replicated scan vs the full CD-GraB device step.
+
+    ``wallclock_sign_us``  — one ``mesh_pair_signs`` call ([W, k] gather +
+                             W-row scan), the only coordination collective;
+    ``wallclock_step_us``  — one full ``grab_step_workers(mesh=...)`` on
+                             [W, d] synthetic gradients (stash/diff/sketch +
+                             the sign dataflow);
+    ``wallclock_sign_frac``— their ratio: how much of the ordering step the
+                             sign traffic could occupy with zero overlap.
+    """
+    from repro.core.distributed import mesh_pair_signs
+    from repro.core.grab import make_sketch
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    rng = np.random.default_rng(seed)
+    rows = [("wallclock_devices", 0, 0, float(n_dev))]
+    for w in workers:
+        if w % n_dev:
+            # None -> JSON null (a NaN literal would make the file invalid)
+            rows.append(("wallclock_skipped", w, 0, None))
+            continue
+        cfg = GrabConfig(pair_balance=True, sketch_dim=k)
+        tmpl = {"g": jnp.zeros((d,), jnp.float32)}
+        sketch = make_sketch(tmpl, k)
+        state = init_parallel_grab_state(tmpl, cfg, w)
+        g = {"g": jnp.asarray(rng.normal(size=(w, d)), jnp.float32)}
+        zs = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+        s0 = jnp.zeros((k,), jnp.float32)
+        sign = jax.jit(lambda s, z: mesh_pair_signs(s, z, mesh))
+        step = jax.jit(lambda st, gg: grab_step_workers(st, gg, cfg, sketch,
+                                                        mesh=mesh))
+        sign_us = _time_us(lambda: sign(s0, zs), reps)
+        step_us = _time_us(lambda: step(state, g), max(reps // 3, 3))
+        rows += [("wallclock_sign_us", w, 0, sign_us),
+                 ("wallclock_step_us", w, 0, step_us),
+                 ("wallclock_sign_frac", w, 0, sign_us / step_us)]
+    return rows
 
 
 def run_train(epochs: int, workers: tuple, seed: int):
@@ -99,11 +164,12 @@ def run_train(epochs: int, workers: tuple, seed: int):
             per_epoch.setdefault(h["epoch"], []).append(h["loss"])
         return [float(np.mean(v)) for _, v in sorted(per_epoch.items())]
 
-    for epoch, l in enumerate(sweep("rr", 1)):
-        print(f"train_rr,1,{epoch},{l:.5f}")
+    rows = [("train_rr", 1, epoch, l)
+            for epoch, l in enumerate(sweep("rr", 1))]
     for w in workers:
-        for epoch, l in enumerate(sweep("cd-grab", w)):
-            print(f"train_cdgrab,{w},{epoch},{l:.5f}")
+        rows += [("train_cdgrab", w, epoch, l)
+                 for epoch, l in enumerate(sweep("cd-grab", w))]
+    return rows
 
 
 def main(argv=None):
@@ -115,12 +181,39 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--train", action="store_true",
                     help="also run the end-to-end loop sweep")
+    ap.add_argument("--wallclock", action="store_true",
+                    help="also time the sign dataflow vs the device step")
+    ap.add_argument("--wallclock-d", type=int, default=65_536,
+                    help="synthetic gradient dim for --wallclock")
+    ap.add_argument("--json", default="BENCH_cd_grab.json",
+                    help="where to write the JSON record ('' disables)")
     args = ap.parse_args(argv)
 
-    print("kind,W,epoch,value")
-    run_herding(args.n, args.d, args.epochs, tuple(args.workers), args.seed)
+    rows = run_herding(args.n, args.d, args.epochs, tuple(args.workers),
+                       args.seed)
     if args.train:
-        run_train(args.epochs, tuple(args.workers), args.seed)
+        rows += run_train(args.epochs, tuple(args.workers), args.seed)
+    if args.wallclock:
+        rows += run_wallclock(tuple(args.workers), d=args.wallclock_d,
+                              seed=args.seed)
+
+    print("kind,W,epoch,value")
+    for kind, w, epoch, v in rows:
+        print(f"{kind},{w},{epoch},{'' if v is None else f'{v:.5f}'}")
+
+    if args.json:
+        rec = {
+            "bench": "cd_grab_scaling",
+            "unix_time": time.time(),
+            "config": {"n": args.n, "d": args.d, "epochs": args.epochs,
+                       "workers": list(args.workers), "seed": args.seed,
+                       "wallclock_d": args.wallclock_d,
+                       "devices": jax.device_count()},
+            "rows": [list(r) for r in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[bench] wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -24,8 +24,32 @@ Two composable strategies for data-parallel meshes:
   tiny next to the gradient all-reduce) and replays the same scan replicated
   on every shard, so every shard derives identical signs with a single
   collective and no server rank.
+
+Alweiss-under-CD-GraB replicated-key invariant
+----------------------------------------------
+The Alweiss balancer is randomized, so coordination additionally requires
+that every shard flips the *same* coins: the PRNG key is replicated
+(``in_specs=P()`` in :func:`mesh_pair_signs`), and the key splits happen
+*inside* the replicated scan, once per worker row in worker-index order.
+Every shard therefore consumes an identical key stream and derives
+bit-identical signs — there is nothing to broadcast and no shard-dependent
+randomness anywhere in the ordering path. Violating this (e.g. folding a
+shard id into the key) would silently degrade CD-GraB to W independent
+balancing walks. Verified on real multi-device meshes in
+``tests/test_mesh_cd_grab.py``.
+
+Kernel dispatch
+---------------
+The deterministic W-row scan has a fused Pallas kernel
+(``kernels/coord_balance.py``): :func:`coordinated_pair_signs` dispatches to
+it when ``impl`` resolves to ``"pallas"`` (default on a real TPU backend;
+override with ``REPRO_COORD_IMPL=pallas|xla``). The SPMD mesh path always
+takes the XLA scan — a pallas_call inside pjit is opaque to the partitioner —
+and the Alweiss balancer stays on XLA too (it needs a per-row PRNG split).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -69,9 +93,19 @@ def signs_from_pair_signs(pair_signs: jax.Array) -> jax.Array:
     return jnp.stack([pair_signs, -pair_signs], axis=1).reshape(-1)
 
 
+def _coord_impl() -> str:
+    """Resolve the coordinated-scan implementation: REPRO_COORD_IMPL wins,
+    else the Pallas kernel on a real TPU backend and XLA everywhere else."""
+    impl = os.environ.get("REPRO_COORD_IMPL")
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
 def coordinated_pair_signs(s: jax.Array, zs: jax.Array, *,
                            kind: str = "deterministic", c: float = 30.0,
-                           key: jax.Array | None = None):
+                           key: jax.Array | None = None,
+                           impl: str | None = None):
     """CD-GraB server step: balance the W workers' pair-difference vectors
     sequentially (worker-index order) against one *shared* running sum.
 
@@ -80,7 +114,19 @@ def coordinated_pair_signs(s: jax.Array, zs: jax.Array, *,
     coordination: worker i's sign sees workers < i's contributions from the
     same timestep, exactly as if a central server consumed the stream
     (z_1^t, ..., z_W^t, z_1^{t+1}, ...).
+
+    ``impl``: "pallas" fuses the W dependent dot/sign/axpy steps into the
+    ``kernels/coord_balance.py`` kernel (deterministic kind only — Alweiss
+    needs per-row PRNG splits); "xla" is the plain ``lax.scan``; None picks
+    via :func:`_coord_impl`. The SPMD path (:func:`mesh_pair_signs`) pins
+    "xla": a pallas_call inside pjit is opaque to the partitioner.
     """
+    if impl is None:
+        impl = _coord_impl()
+    if impl == "pallas" and kind == "deterministic":
+        from repro.kernels.ops import coord_balance
+        signs, new_s = coord_balance(s, zs)
+        return new_s, signs
     if key is None:
         key = jax.random.PRNGKey(0)
 
@@ -102,24 +148,37 @@ def coordinated_pair_signs(s: jax.Array, zs: jax.Array, *,
 
 def mesh_pair_signs(s: jax.Array, z_local: jax.Array, mesh,
                     data_axis: str = "data", *, kind: str = "deterministic",
-                    c: float = 30.0):
+                    c: float = 30.0, key: jax.Array | None = None):
     """Coordinated pair signs on a mesh: the tiny sign dataflow of CD-GraB.
 
     ``z_local``: [W, k] sketched pair differences, sharded over ``data_axis``
     (each shard holds its own workers' rows); ``s``: [k] replicated running
-    sum. Every shard all-gathers the W·k floats and replays the same
-    deterministic scan, so the outputs are bit-identical everywhere — one
-    collective, no server rank, nothing further to broadcast.
+    sum. Every shard all-gathers the W·k floats and replays the same scan,
+    so the outputs are bit-identical everywhere — one collective, no server
+    rank, nothing further to broadcast.
 
-    Returns (new_s [k] replicated, signs [W] replicated).
+    Replicated-key invariant (``kind="alweiss"``): ``key`` enters with
+    ``in_specs=P()`` — the *same* key on every shard — and all splits happen
+    inside the replicated scan, once per worker row in worker-index order.
+    Every shard consumes an identical PRNG stream, hence identical signs on
+    all W shards; never fold a shard id into this key (that would degrade
+    CD-GraB to W independent balancing walks).
+
+    Returns (new_s [k] replicated, signs [W] replicated). Always takes the
+    XLA scan (``impl="xla"``): this runs under the SPMD partitioner, where a
+    pallas_call is opaque.
     """
     from jax.experimental.shard_map import shard_map
 
-    def fn(s_r, z_l):
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def fn(s_r, z_l, key_r):
         zs = jax.lax.all_gather(z_l, data_axis, axis=0, tiled=True)
-        return coordinated_pair_signs(s_r, zs, kind=kind, c=c)
+        return coordinated_pair_signs(s_r, zs, kind=kind, c=c, key=key_r,
+                                      impl="xla")
 
     return shard_map(fn, mesh=mesh,
-                     in_specs=(P(), P(data_axis, None)),
+                     in_specs=(P(), P(data_axis, None), P()),
                      out_specs=(P(), P()),
-                     check_rep=False)(s, z_local)
+                     check_rep=False)(s, z_local, key)

@@ -215,7 +215,8 @@ def init_parallel_grab_state(grad_template, cfg: GrabConfig,
 
 
 def grab_step_workers(state: GrabState, grads, cfg: GrabConfig,
-                      sketch: Optional[Sketch] = None):
+                      sketch: Optional[Sketch] = None, *,
+                      mesh=None, data_axis: str = "data"):
     """One CD-GraB inner iteration over W workers' gradients.
 
     ``grads``: pytree whose leaves carry a leading [W] worker axis (worker
@@ -225,13 +226,24 @@ def grab_step_workers(state: GrabState, grads, cfg: GrabConfig,
     ``coordinated_pair_signs`` scan), which is what makes the signs globally
     coherent rather than W independent balancing walks.
 
+    ``mesh``: when given (the launcher's mesh-native path), the sketch-mode
+    sign dataflow runs through ``distributed.mesh_pair_signs`` — the [W, k]
+    sketched differences stay sharded over ``data_axis`` (each DP shard
+    sketches only its own workers' rows), one all-gather moves the W·k
+    floats, and the scan replays replicated so every shard derives
+    bit-identical signs. Without a mesh (host-simulated workers, CPU tests)
+    the same scan runs on the gathered array directly — the two are
+    bit-identical (``tests/test_mesh_cd_grab.py``). Full-pytree mode ignores
+    ``mesh``: its tree dots already lower to per-shard partials + psum under
+    pjit.
+
     Returns (new_state, eps [W] in {-1, 0, +1}): zeros on even (stash)
     steps, the pair signs on odd steps — the host expands them per worker
     (``orderings.ParallelGrabOrder``). Like ``_grab_step_pair``, both
     branches are computed and select'd; the balance scan is O(W·d) flops,
     noise next to the W gradient computations the step already did.
     """
-    from repro.core.distributed import coordinated_pair_signs
+    from repro.core.distributed import coordinated_pair_signs, mesh_pair_signs
 
     g32 = jax.tree.map(lambda x: x.astype(jnp.float32), grads)
     n_workers = jax.tree.leaves(g32)[0].shape[0]
@@ -251,8 +263,13 @@ def grab_step_workers(state: GrabState, grads, cfg: GrabConfig,
             key, sub = jax.random.split(key)
         else:
             sub = key
-        new_s, eps_bal = coordinated_pair_signs(
-            state.s, zs, kind=cfg.balancer, c=cfg.alweiss_c, key=sub)
+        if mesh is not None:
+            new_s, eps_bal = mesh_pair_signs(
+                state.s, zs, mesh, data_axis, kind=cfg.balancer,
+                c=cfg.alweiss_c, key=sub)
+        else:
+            new_s, eps_bal = coordinated_pair_signs(
+                state.s, zs, kind=cfg.balancer, c=cfg.alweiss_c, key=sub)
     else:
         def one_worker(carry, z_w):
             s_c, key_c = carry

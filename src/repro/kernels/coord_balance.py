@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused CD-GraB coordinated pair-balance scan.
+
+The sketch-mode CD-GraB inner loop (``core.distributed.coordinated_pair_signs``)
+is, per pair timestep, a *W-row* sequential scan against the one shared
+running sum:
+
+    for w in range(W):                    # worker-index order — the coordination
+        z_w  = zprev_w - zcur_w           # pair difference (mean-free)
+        dot  = <s, z_w>                   # reduction over k
+        eps  = +1 if dot <= 0 else -1
+        s   += eps * z_w                  # axpy over k
+
+XLA lowers the ``lax.scan`` form to W separate subtract/reduce/select/add HLO
+ops, each round-tripping ``s`` through HBM. This kernel is the same shape as
+``kernels/balance.py`` but fuses one step further: the pair-difference
+subtraction happens in registers, so the [W, k] difference matrix is never
+materialized in HBM, and the running sum stays resident in VMEM across all W
+dependent steps:
+
+* grid = (W // TILE_W,), sequential on TPU; the running sum lives in a VMEM
+  scratch buffer persisting across grid steps (initialized from ``s0`` at
+  step 0, flushed to the output at the last step).
+* each grid step consumes TILE_W rows of the stashed (``z_prev``) and current
+  (``z_cur``) sketched gradients with an in-kernel ``fori_loop`` — the
+  recurrence is inherently sequential; the parallelism is inside each row's
+  subtract/dot/axpy, which maps onto the VPU lanes.
+* the ``ops.coord_balance`` wrapper pads W to a TILE_W multiple with zero
+  rows (dot 0 -> sign +1, sum unperturbed) and k to the 128-lane multiple,
+  and promotes bf16 inputs to f32 — sign decisions are not robust in bf16.
+  With ``z_cur=None`` (differences already formed) the fusion degenerates to
+  the plain balance scan and the wrapper delegates to ``ops.balance_scan``;
+  this kernel only runs the genuine two-operand form.
+
+Only the deterministic (Algorithm 5) balancer is fused; the Alweiss balancer
+needs a per-row PRNG split and stays on the XLA scan. Likewise the SPMD mesh
+path (``mesh_pair_signs``) keeps the XLA scan: a pallas_call inside pjit is
+opaque to the partitioner (see ``core.distributed`` for the dispatch rules).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_W = 8
+
+
+def _coord_balance_kernel(s0_ref, zp_ref, zc_ref, signs_ref, s_out_ref,
+                          s_scratch):
+    step = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+
+    @pl.when(step == 0)
+    def _init():
+        s_scratch[...] = s0_ref[...]
+
+    def body(r, _):
+        z_row = zp_ref[r, :] - zc_ref[r, :]
+        dot = jnp.sum(s_scratch[0, :] * z_row)
+        eps = jnp.where(dot <= 0.0, 1.0, -1.0).astype(jnp.float32)
+        s_scratch[0, :] = s_scratch[0, :] + eps * z_row
+        signs_ref[r] = eps
+        return 0
+
+    jax.lax.fori_loop(0, zp_ref.shape[0], body, 0)
+
+    @pl.when(step == nsteps - 1)
+    def _flush():
+        s_out_ref[...] = s_scratch[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coord_balance_pallas(s0: jax.Array, z_prev: jax.Array, z_cur: jax.Array,
+                         *, interpret: bool = True):
+    """Run the fused coordinated pair-balance scan.
+
+    s0: [k] f32; z_prev, z_cur: [W, k] f32 (stashed / current sketches; the
+    balanced vectors are the rows of ``z_prev - z_cur``).
+    Returns (signs [W] f32 in {-1,+1}, s_out [k] f32). The wrapper in
+    ``repro.kernels.ops`` handles padding and dtype; call that instead.
+    """
+    w, k = z_prev.shape
+    assert z_cur.shape == (w, k), (z_prev.shape, z_cur.shape)
+    assert w % TILE_W == 0 and k % 128 == 0, (w, k)
+    s0_2d = s0.reshape(1, k)
+    grid = (w // TILE_W,)
+    signs, s_out = pl.pallas_call(
+        _coord_balance_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),       # s0 (revisited)
+            pl.BlockSpec((TILE_W, k), lambda i: (i, 0)),  # z_prev tile
+            pl.BlockSpec((TILE_W, k), lambda i: (i, 0)),  # z_cur tile
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_W,), lambda i: (i,)),      # signs tile
+            pl.BlockSpec((1, k), lambda i: (0, 0)),       # s_out (revisited)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w,), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, k), jnp.float32)],
+        interpret=interpret,
+    )(s0_2d, z_prev, z_cur)
+    return signs, s_out.reshape(k)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.balance import TILE_M, balance_scan_pallas
+from repro.kernels.coord_balance import TILE_W, coord_balance_pallas
 from repro.kernels.lin_scan import CHUNK, gla_scan_pallas
 from repro.kernels import ref
 
@@ -42,6 +43,37 @@ def balance_scan(s0: jax.Array, g: jax.Array, interpret: bool | None = None):
     sp = jnp.zeros((kp,), jnp.float32).at[:k].set(s0.astype(jnp.float32))
     signs, s_out = balance_scan_pallas(sp, gp, interpret=interpret)
     return signs[:m].astype(jnp.int32), s_out[:k]
+
+
+def coord_balance(s0: jax.Array, z_prev: jax.Array, z_cur: jax.Array | None = None,
+                  interpret: bool | None = None):
+    """Fused CD-GraB coordinated pair-balance scan (the W-row sequential
+    inner loop of ``core.distributed.coordinated_pair_signs``).
+
+    s0: [k]; z_prev, z_cur: [W, k] — balances the rows of ``z_prev - z_cur``
+    in worker-index order. Pass ``z_cur=None`` when the differences are
+    already formed: that degenerate case IS the plain balance scan, so it
+    delegates to :func:`balance_scan` (same contract, no zero-matrix
+    streaming) and only the two-operand form runs the fused-subtract kernel.
+    Returns (signs [W] int32 in {-1,+1}, s_out [k] f32).
+
+    Pads W to a TILE_W multiple with zero rows (dot 0 -> sign +1, the sum is
+    unperturbed) and k to the 128-lane multiple; bf16 inputs are promoted to
+    f32 before the scan (sign decisions are not robust in bf16).
+    """
+    if z_cur is None:
+        return balance_scan(s0, z_prev, interpret=interpret)
+    if interpret is None:
+        interpret = _default_interpret()
+    w, k = z_prev.shape
+    wp, kp = _round_up(max(w, TILE_W), TILE_W), _round_up(max(k, 128), 128)
+    zp = jnp.zeros((wp, kp), jnp.float32).at[:w, :k].set(
+        z_prev.astype(jnp.float32))
+    zc = jnp.zeros((wp, kp), jnp.float32).at[:w, :k].set(
+        z_cur.astype(jnp.float32))
+    sp = jnp.zeros((kp,), jnp.float32).at[:k].set(s0.astype(jnp.float32))
+    signs, s_out = coord_balance_pallas(sp, zp, zc, interpret=interpret)
+    return signs[:w].astype(jnp.int32), s_out[:k]
 
 
 def gla_scan(q, k, v, w, u=None, interpret: bool | None = None,
@@ -77,6 +109,7 @@ def gla_scan(q, k, v, w, u=None, interpret: bool | None = None,
 
 # Re-export oracles for test convenience.
 balance_scan_ref = ref.balance_scan_ref
+coord_balance_ref = ref.coord_balance_ref
 gla_scan_ref = ref.gla_scan_ref
 
 

@@ -19,6 +19,17 @@ def balance_scan_ref(s0: jax.Array, g: jax.Array):
     return signs, s_out
 
 
+def coord_balance_ref(s0: jax.Array, z_prev: jax.Array,
+                      z_cur: jax.Array | None = None):
+    """CD-GraB coordinated pair-balance scan: balance the rows of
+    ``z_prev - z_cur`` sequentially (worker-index order) against ``s0``.
+    s0: [k], z_prev/z_cur: [W, k] -> (signs [W], s_out [k])."""
+    z = z_prev.astype(jnp.float32)
+    if z_cur is not None:
+        z = z - z_cur.astype(jnp.float32)
+    return balance_scan_ref(s0, z)
+
+
 def gla_scan_ref(q, k, v, w, u=None, return_state: bool = False,
                  post_update: bool = False):
     """Gated-linear-attention scan (RWKV6 / Mamba-style recurrence).

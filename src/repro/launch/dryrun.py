@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, cell_applicable
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import analyze_hlo, model_flops, roofline_terms
+from repro.launch.roofline import (analyze_hlo, model_flops, roofline_terms,
+                                   sign_collective_terms)
 from repro.launch.sharding import ShardPolicy
 from repro.launch.specs import make_cell
 from repro.models.config import SHAPES, SHAPES_BY_NAME
@@ -38,7 +39,8 @@ from repro.models.config import SHAPES, SHAPES_BY_NAME
 
 def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
              keep_hlo=False, n_micro=None, sketch_dim=0, use_grab=True,
-             pad_heads=False, quant8=False) -> dict:
+             pad_heads=False, quant8=False, ordering=None,
+             workers=None) -> dict:
     cfg, _ = get_config(arch)
     shape = SHAPES_BY_NAME[shape_name]
     ok, reason = cell_applicable(cfg, shape)
@@ -56,7 +58,8 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
     set_activation_specs(data_axes(mesh), model_size=mesh.shape.get("model", 0))
     try:
         kw = {"sketch_dim": sketch_dim, "use_grab": use_grab,
-              "pad_heads": pad_heads, "quant8": quant8}
+              "pad_heads": pad_heads, "quant8": quant8,
+              "ordering": ordering, "workers": workers}
         if n_micro is not None:
             kw["n_micro"] = n_micro
         step_fn, abs_args, in_shardings, donate, meta = make_cell(
@@ -75,6 +78,8 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # newer jax: one dict per program
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         n_dev = mesh.devices.size
         hc = analyze_hlo(hlo, n_dev)
@@ -125,20 +130,31 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
             mem_code=getattr(mem, "generated_code_size_in_bytes", None),
             model_flops_per_dev=mf_per_dev,
             useful_ratio=(mf_per_dev / flops) if flops else None,
+            ordering=meta.get("ordering"),
             **terms,
         )
+        if meta.get("cd_grab"):
+            # CD-GraB: the sign all-gather as first-class roofline terms,
+            # attributable next to the HLO-parsed collective totals.
+            rec["cd_grab"] = meta["cd_grab"]
+            rec.update(sign_collective_terms(**meta["cd_grab"]))
         if keep_hlo:
             rec["hlo_path"] = _dump_hlo(arch, shape_name, rec["mesh"], hlo)
         if verbose:
             hbm = (rec["mem_args"] or 0) + (rec["mem_temp"] or 0) + \
                 (rec["mem_output"] or 0)
+            sign = ""
+            if "sign_collective_s" in rec:
+                sign = (f" sign-coll={rec['sign_collective_s']*1e6:.1f}us"
+                        f"/{rec['sign_collective_bytes_per_dev']/1e3:.0f}KB")
             print(f"[dryrun] {arch} x {shape_name} [{rec['mesh']}] OK "
                   f"compile={t_compile:.0f}s "
                   f"mem/dev={(hbm)/2**30:.2f}GiB "
                   f"compute={terms['compute_s']*1e3:.2f}ms "
                   f"memory={terms['memory_s']*1e3:.2f}ms "
                   f"collective={terms['collective_s']*1e3:.2f}ms "
-                  f"dom={terms['dominant']} useful={rec['useful_ratio'] and round(rec['useful_ratio'],3)}")
+                  f"dom={terms['dominant']} useful={rec['useful_ratio'] and round(rec['useful_ratio'],3)}"
+                  + sign)
     except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
         rec.update(status="fail", reason=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-2000:])
@@ -169,6 +185,13 @@ def main():
     ap.add_argument("--zero1", action="store_true",
                     help="params TP-only, opt/GraB state FSDP-sharded")
     ap.add_argument("--no-grab", action="store_true")
+    ap.add_argument("--ordering", choices=["grab", "cd-grab", "none"],
+                    default=None,
+                    help="train-cell ordering subsystem; cd-grab lowers the "
+                         "mesh_pair_signs all-gather + replicated scan on "
+                         "the production mesh (W workers over 'data')")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="cd-grab worker count W (default: data-axis size)")
     ap.add_argument("--sketch-dim", type=int, default=0)
     ap.add_argument("--pad-heads", action="store_true",
                     help="pad GQA query heads per group to divide TP")
@@ -198,6 +221,10 @@ def main():
     else:
         meshes = [args.multi_pod]
 
+    ordering = args.ordering
+    if ordering is None and args.no_grab:
+        ordering = "none"
+
     results = []
     for multi_pod in meshes:
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -205,9 +232,12 @@ def main():
             rec = run_cell(arch, shape, mesh, policy, keep_hlo=args.keep_hlo,
                            n_micro=args.n_micro, sketch_dim=args.sketch_dim,
                            use_grab=not args.no_grab, pad_heads=args.pad_heads,
-                           quant8=args.quant8)
+                           quant8=args.quant8, ordering=ordering,
+                           workers=args.workers)
             results.append(rec)
             tag = "multipod" if multi_pod else "singlepod"
+            if ordering and ordering != "grab":
+                tag += "_" + ordering.replace("-", "")
             if args.tag:
                 tag += "_" + args.tag
             fname = os.path.join(args.out, f"{arch}_{shape}_{tag}.json")

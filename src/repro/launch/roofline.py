@@ -263,6 +263,34 @@ def roofline_terms(flops: float, bytes_accessed: float,
     return terms
 
 
+def sign_collective_terms(n_workers: int, sketch_dim: int, pair_steps: int,
+                          group: int, dtype_bytes: int = 4) -> dict:
+    """Roofline terms for CD-GraB's per-step sign dataflow.
+
+    Each ``mesh_pair_signs`` invocation all-gathers the [W, sketch_dim] f32
+    block over the ``group``-sized data axis (ring factor (g-1)/g on the
+    gathered result) and replays the scan replicated — no further traffic.
+    The train step invokes it once per microbatch timestep (``pair_steps`` =
+    n_micro / W; the stash/balance select evaluates both branches), so the
+    per-device, per-step cost is:
+
+      bytes = pair_steps * W * sketch_dim * 4 * (g-1)/g
+      s     = bytes / ICI_BW        (unoverlapped upper bound)
+
+    These are *analytic* terms, kept separate from the HLO-parsed collective
+    totals so the sign overhead is attributable: compare
+    ``sign_collective_s`` against ``collective_s`` (gradient all-reduces
+    dominate) to see that coordination rides for free.
+    """
+    rb = n_workers * sketch_dim * dtype_bytes
+    moved = rb * _ring_factor("all-gather", group) * pair_steps
+    return {
+        "sign_collective_bytes_per_dev": moved,
+        "sign_collective_count": pair_steps,
+        "sign_collective_s": moved / ICI_BW,
+    }
+
+
 def model_flops(n_params: int, tokens_per_step: int,
                 active_frac: float = 1.0, train: bool = True) -> float:
     """6*N*D for a train step; 2*N*D for inference. MoE: scale by active

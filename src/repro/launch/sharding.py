@@ -161,9 +161,12 @@ def cd_grab_state_specs(state, policy: ShardPolicy, *,
     # rule-match the stash against its per-worker (unstacked) shape, then
     # prepend the worker axis — dropping any data-axis entry the FSDP rules
     # put on the inner dims (a mesh axis may appear only once per spec, and
-    # the worker axis is the stash's data-parallel dimension)
+    # the worker axis is the stash's data-parallel dimension). Shape-level
+    # unstacking (not leaf[0]) so abstract ShapeDtypeStruct states from
+    # eval_shape — the dry-run launcher's input — work too.
     slim = jax.tree_util.tree_map_with_path(
-        lambda path, leaf: leaf[0] if is_stash(path) else leaf, state)
+        lambda path, leaf: (jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+                            if is_stash(path) else leaf), state)
     base = state_specs(slim, policy)
 
     def stack(spec):

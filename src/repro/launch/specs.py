@@ -22,7 +22,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.core.grab import GrabConfig
 from repro.launch.mesh import data_axes
-from repro.launch.sharding import ShardPolicy, state_specs, tree_specs, path_str
+from repro.launch.sharding import (ShardPolicy, cd_grab_state_specs,
+                                   state_specs, tree_specs, path_str)
 from repro.models import lm, whisper
 from repro.models.config import SHAPES_BY_NAME, ModelConfig
 from repro.optim import adamw, cosine
@@ -31,6 +32,10 @@ from repro.train.step import build_train_step, init_train_state
 from repro.utils.tree import param_count
 
 N_MICRO = 8     # microbatches per optimizer step (GraB balancing granularity)
+# Default sketch width for the mesh CD-GraB cells: the sign all-gather moves
+# W * CD_GRAB_SKETCH_DIM floats per pair step — noise next to the gradient
+# all-reduce, but wide enough that the balance dot is not pure noise.
+CD_GRAB_SKETCH_DIM = 1024
 
 
 def _sds(shape, dtype):
@@ -79,9 +84,19 @@ def _init_params_fn(cfg: ModelConfig, max_dec_len: int = 4096):
 
 
 def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = None,
-              use_grab: bool = True, n_micro: int = N_MICRO,
+              use_grab: bool = True, n_micro: Optional[int] = None,
               sketch_dim: int = 0, pad_heads: bool = False,
-              quant8: bool = False):
+              quant8: bool = False, ordering: Optional[str] = None,
+              workers: Optional[int] = None):
+    """Build one (arch x shape) cell. ``ordering`` picks the data-ordering
+    subsystem for train cells: "grab" (default, single-stream Algorithm 4),
+    "cd-grab" (mesh-native CD-GraB: W workers sharded over the data axis,
+    sketch-mode pair balancing, ``mesh_pair_signs`` all-gather + replicated
+    scan, worker-stacked stash sharded via ``cd_grab_state_specs``), or
+    "none" (plain accumulate — RR/SO baselines). ``use_grab=False`` is the
+    legacy spelling of ordering="none". ``workers`` defaults to the mesh's
+    data-axis size so each DP shard owns exactly one worker row.
+    """
     policy = policy or ShardPolicy()
     cfg, _ = get_config(arch)
     if pad_heads:
@@ -108,13 +123,30 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
 
     if shape.kind == "train":
         opt = adamw()
+        if ordering is None:
+            ordering = "grab" if use_grab else "none"
+        cd_grab = ordering in ("cd-grab", "cd_grab", "cdgrab")
+        n_workers = 1
         grab_cfg = None
         sketch = None
-        if use_grab:
+        from repro.core.grab import make_sketch
+        if cd_grab:
+            n_workers = int(workers or mesh.shape.get("data", 1))
+            dp_size = mesh.shape.get("data", 1)
+            assert n_workers % dp_size == 0, \
+                f"W={n_workers} must shard over the data axis ({dp_size})"
+            k_dim = sketch_dim or CD_GRAB_SKETCH_DIM
+            if n_micro is None:
+                n_micro = 2 * n_workers      # T=2 pair timesteps per step
+            assert n_micro % n_workers == 0, (n_micro, n_workers)
+            grab_cfg = GrabConfig(pair_balance=True, sketch_dim=k_dim)
+            sketch = make_sketch(params_abs, k_dim)
+        elif ordering == "grab":
             grab_cfg = GrabConfig(sketch_dim=sketch_dim)
             if sketch_dim:
-                from repro.core.grab import make_sketch
                 sketch = make_sketch(params_abs, sketch_dim)
+        if n_micro is None:
+            n_micro = N_MICRO
         loss = _loss_for(cfg)
         mb = shape.global_batch // n_micro
         assert shape.global_batch % n_micro == 0
@@ -131,10 +163,16 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
         step_fn = build_train_step(loss, opt, cosine(3e-4, 10_000, 200),
                                    grab_cfg, n_micro_per_epoch=1024,
                                    sketch=sketch,
-                                   constrain_grads=constrain_grads)
+                                   constrain_grads=constrain_grads,
+                                   n_workers=n_workers,
+                                   mesh=mesh if cd_grab else None)
         state_abs = jax.eval_shape(
-            lambda: init_train_state(params_abs, opt, grab_cfg))
-        s_specs = state_specs(state_abs, policy)
+            lambda: init_train_state(params_abs, opt, grab_cfg,
+                                     n_workers=n_workers))
+        # CD-GraB: the worker-stacked pair stash shards its leading [W] axis
+        # over 'data'; everything else keeps the plain state rules.
+        s_specs = (cd_grab_state_specs(state_abs, policy) if n_workers > 1
+                   else state_specs(state_abs, policy))
 
         if cfg.enc_dec:
             batch_abs = {
@@ -152,9 +190,25 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
             batch_abs = {"tokens": _sds((n_micro, mb, shape.seq_len), jnp.int32),
                          "labels": _sds((n_micro, mb, shape.seq_len), jnp.int32)}
         mb_dp = _dp(mesh, mb)
-        b_specs = jax.tree.map(
-            lambda l: P(*([None, mb_dp] + [None] * (l.ndim - 2))), batch_abs)
-        meta.update(n_micro=n_micro, micro_batch=mb)
+        lead_dp = _dp(mesh, n_micro) if cd_grab else None
+        if lead_dp is not None:
+            # CD-GraB: shard the microbatch-stream axis (it regroups to
+            # [T, W, ...] inside the step with W = worker rows over 'data');
+            # the per-worker microbatch dim then stays local to its shard.
+            b_specs = jax.tree.map(
+                lambda l: P(*([lead_dp] + [None] * (l.ndim - 1))), batch_abs)
+        else:
+            b_specs = jax.tree.map(
+                lambda l: P(*([None, mb_dp] + [None] * (l.ndim - 2))),
+                batch_abs)
+        meta.update(n_micro=n_micro, micro_batch=mb, ordering=ordering)
+        if cd_grab:
+            meta["cd_grab"] = {
+                "n_workers": n_workers,
+                "sketch_dim": grab_cfg.sketch_dim,
+                "pair_steps": n_micro // n_workers,
+                "group": mesh.shape.get("data", 1),
+            }
         return (step_fn, (state_abs, batch_abs), (s_specs, b_specs), (0,), meta)
 
     if shape.kind == "prefill":

@@ -40,7 +40,7 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
                      n_micro_per_epoch: int = 1,
                      sketch: Optional[Sketch] = None,
                      constrain_grads: Optional[Callable] = None,
-                     n_workers: int = 1):
+                     n_workers: int = 1, mesh=None, data_axis: str = "data"):
     """Returns train_step(state, batch) -> (state, metrics).
 
     loss_fn(params, micro_batch) -> (loss, metrics_dict).
@@ -56,6 +56,14 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
     coordinated through the shared running sum in
     ``grab.grab_step_workers``. ``signs`` then has shape [T, W]. Requires
     ``grab_cfg.pair_balance`` and ``n_micro % n_workers == 0``.
+
+    ``mesh``: the launcher's mesh-native CD-GraB path — forwarded to
+    ``grab.grab_step_workers`` so the sketch-mode sign dataflow runs as the
+    ``mesh_pair_signs`` all-gather + replicated scan instead of the
+    host-simulated gathered scan (bit-identical results; the mesh form is
+    what the SPMD partitioner lowers onto the hardware). Only meaningful
+    with ``n_workers > 1``; ``data_axis`` names the mesh axis the worker
+    rows shard over.
 
     ``constrain_grads``: optional tree->tree applying param PartitionSpecs
     (with_sharding_constraint) to gradient-shaped pytrees. Without it, XLA's
@@ -103,7 +111,8 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
             (losses, metrics), grads = jax.vmap(
                 grad_fn, in_axes=(None, 0))(params, mb_w)
             grab_state, eps = grab_step_workers(grab_state, grads,
-                                                grab_cfg, sketch)
+                                                grab_cfg, sketch,
+                                                mesh=mesh, data_axis=data_axis)
             grab_state = pin_grab(grab_state)
             gmean = pin(jax.tree.map(
                 lambda g: g.astype(jnp.float32).mean(axis=0), grads))

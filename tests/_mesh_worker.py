@@ -1,0 +1,120 @@
+"""Subprocess entry point for the device-count-parameterized mesh tests.
+
+JAX locks the device count at first init, so a *real* multi-device CPU mesh
+needs ``--xla_force_host_platform_device_count`` set before the process ever
+imports jax — hence this worker: ``tests/test_mesh_cd_grab.py`` spawns
+``python _mesh_worker.py <n_devices>`` with a clean environment, and the
+worker prints one JSON object on its last stdout line.
+
+The constants (W, K, SEED, ...) live at module top so the parent test can
+import them and compute the identical host-side reference on its single
+device — everything here is seeded numpy, bit-reproducible across processes.
+Keep all jax imports inside :func:`main` (importing this module from the
+parent must not initialize jax with the forced flags).
+"""
+import json
+import os
+import sys
+
+W = 8           # worker rows; divisible by every tested device count
+K = 96          # sketch width; deliberately not a lane multiple
+SEED = 1234
+ALWEISS_C = 5.0
+ALWEISS_KEY = 7
+STEP_DIM = 16   # full-gradient dim for the grab_step_workers check
+STEP_SKETCH = 8
+STEP_T = 4      # timesteps (2 pair steps)
+
+
+def _inputs():
+    import numpy as np
+    rng = np.random.default_rng(SEED)
+    zs = rng.normal(size=(W, K)).astype(np.float32)
+    s0 = rng.normal(size=(K,)).astype(np.float32)
+    gs = rng.normal(size=(STEP_T, W, STEP_DIM)).astype(np.float32)
+    return zs, s0, gs
+
+
+def main(n_dev: int) -> dict:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_dev}").strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.distributed import coordinated_pair_signs, mesh_pair_signs
+    from repro.core.grab import (GrabConfig, grab_step_workers,
+                                 init_parallel_grab_state, make_sketch)
+
+    assert jax.device_count() == n_dev, (jax.device_count(), n_dev)
+    zs_np, s0_np, gs_np = _inputs()
+    zs, s0 = jnp.asarray(zs_np), jnp.asarray(s0_np)
+
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    z_sh = jax.device_put(zs, NamedSharding(mesh, P("data", None)))
+    s_rep = jax.device_put(s0, NamedSharding(mesh, P()))
+    out = {"n_dev": n_dev}
+
+    def replicated_identically(x):
+        shards = [np.asarray(s.data) for s in x.addressable_shards]
+        return all(np.array_equal(shards[0], s) for s in shards[1:])
+
+    # --- deterministic: mesh all-gather + replicated scan vs host scan ----
+    s_mesh, signs_mesh = mesh_pair_signs(s_rep, z_sh, mesh)
+    s_host, signs_host = coordinated_pair_signs(s0, zs, impl="xla")
+    out["det_bitmatch"] = bool(
+        np.array_equal(np.asarray(signs_mesh), np.asarray(signs_host))
+        and np.array_equal(np.asarray(s_mesh), np.asarray(s_host)))
+    out["det_replicated"] = bool(replicated_identically(signs_mesh)
+                                 and replicated_identically(s_mesh))
+    out["det_signs"] = np.asarray(signs_mesh).tolist()
+    # f32 -> python float (f64) is exact, so JSON round-trips the bits
+    out["det_s"] = [float(x) for x in np.asarray(s_mesh)]
+
+    # --- Pallas kernel parity on the same inputs --------------------------
+    s_pal, signs_pal = coordinated_pair_signs(s0, zs, impl="pallas")
+    out["pallas_sign_bitmatch"] = bool(
+        np.array_equal(np.asarray(signs_pal), np.asarray(signs_host)))
+    out["pallas_s_close"] = bool(np.allclose(
+        np.asarray(s_pal), np.asarray(s_host), rtol=1e-5, atol=1e-5))
+
+    # --- Alweiss replicated-key invariant ---------------------------------
+    key = jax.random.PRNGKey(ALWEISS_KEY)
+    s_al, signs_al = mesh_pair_signs(s_rep, z_sh, mesh, kind="alweiss",
+                                     c=ALWEISS_C, key=key)
+    s_al_h, signs_al_h = coordinated_pair_signs(s0, zs, kind="alweiss",
+                                                c=ALWEISS_C, key=key,
+                                                impl="xla")
+    out["alweiss_bitmatch"] = bool(
+        np.array_equal(np.asarray(signs_al), np.asarray(signs_al_h))
+        and np.array_equal(np.asarray(s_al), np.asarray(s_al_h)))
+    out["alweiss_replicated"] = bool(replicated_identically(signs_al)
+                                     and replicated_identically(s_al))
+    out["alweiss_signs"] = np.asarray(signs_al).tolist()
+
+    # --- full device step: grab_step_workers(mesh=...) vs host path -------
+    cfg = GrabConfig(pair_balance=True, sketch_dim=STEP_SKETCH)
+    tmpl = {"g": jnp.zeros((STEP_DIM,), jnp.float32)}
+    sketch = make_sketch(tmpl, STEP_SKETCH)
+    st_m = init_parallel_grab_state(tmpl, cfg, W)
+    st_h = init_parallel_grab_state(tmpl, cfg, W)
+    step_eps = []
+    ok = True
+    for t in range(STEP_T):
+        g = {"g": jnp.asarray(gs_np[t])}
+        st_m, em = grab_step_workers(st_m, g, cfg, sketch, mesh=mesh)
+        st_h, eh = grab_step_workers(st_h, g, cfg, sketch)
+        ok = ok and bool(np.array_equal(np.asarray(em), np.asarray(eh)))
+        step_eps.append(np.asarray(em).tolist())
+    ok = ok and bool(np.array_equal(np.asarray(st_m.s), np.asarray(st_h.s)))
+    out["step_bitmatch"] = ok
+    out["step_signs"] = step_eps
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(int(sys.argv[1]))))

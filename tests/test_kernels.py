@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.ops import (balance_scan, balance_scan_ref, gla_scan,
-                               gla_scan_ref)
+from repro.kernels.ops import (balance_scan, balance_scan_ref, coord_balance,
+                               coord_balance_ref, gla_scan, gla_scan_ref)
 
 
 @pytest.mark.parametrize("m,k", [(1, 8), (5, 37), (8, 128), (16, 128),
@@ -44,6 +44,97 @@ def test_balance_kernel_property(m, k, seed):
     np.testing.assert_array_equal(np.asarray(signs_k), np.asarray(signs_r))
     np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# coord_balance: the fused CD-GraB W-row coordinated pair-balance scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w,k", [(1, 8), (3, 96), (5, 37), (8, 128),
+                                 (11, 130), (16, 300), (40, 1024)])
+def test_coord_balance_kernel_matches_ref(w, k):
+    """Edge shapes on purpose: k not a lane (128) multiple, W not a TILE_W
+    multiple — the wrapper's zero-row/zero-column padding must be inert."""
+    rng = np.random.default_rng(w * 1000 + k)
+    zp = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    zc = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    signs_k, s_k = coord_balance(s0, zp, zc, interpret=True)
+    signs_r, s_r = coord_balance_ref(s0, zp, zc)
+    np.testing.assert_array_equal(np.asarray(signs_k), np.asarray(signs_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(w=st.integers(1, 40), k=st.integers(1, 200), seed=st.integers(0, 2**16),
+       prediffed=st.booleans())
+def test_coord_balance_kernel_property(w, k, seed, prediffed):
+    """Property parity vs the pure scan, both call forms: fused (z_prev,
+    z_cur) and pre-diffed (z_cur=None) must agree with the reference."""
+    rng = np.random.default_rng(seed)
+    zp = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    zc = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    if prediffed:
+        signs_k, s_k = coord_balance(s0, zp - zc, None, interpret=True)
+    else:
+        signs_k, s_k = coord_balance(s0, zp, zc, interpret=True)
+    signs_r, s_r = coord_balance_ref(s0, zp, zc)
+    np.testing.assert_array_equal(np.asarray(signs_k), np.asarray(signs_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_coord_balance_zero_dot_ties():
+    """Algorithm 5 resolves <s,z> == 0 to +1, and IEEE says -0.0 <= 0: both
+    +0.0 and -0.0 dots must give sign +1 in kernel and reference alike."""
+    k = 8
+    # s0 = 0 -> every dot is +0.0; rows include -0.0 entries
+    z = jnp.asarray(np.array([[-0.0, 1, -1, 0, 0, 0, 0, 0],
+                              [0.0, -1, 1, -0.0, 0, 0, 0, 0]]), jnp.float32)
+    s0 = jnp.zeros((k,), jnp.float32)
+    signs_k, _ = coord_balance(s0, z, None, interpret=True)
+    signs_r, _ = coord_balance_ref(s0, z)
+    assert np.asarray(signs_k).tolist() == [1, 1]
+    np.testing.assert_array_equal(np.asarray(signs_k), np.asarray(signs_r))
+    # dot exactly -0.0: s = e_0, z_row0 = (-0.0, ...) -> <s, z> = -0.0 -> +1
+    s1 = jnp.zeros((k,), jnp.float32).at[0].set(1.0)
+    zneg = jnp.zeros((1, k), jnp.float32).at[0, 0].set(-0.0)
+    signs_k, _ = coord_balance(s1, zneg, None, interpret=True)
+    signs_r, _ = coord_balance_ref(s1, zneg)
+    assert int(signs_k[0]) == 1 == int(signs_r[0])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_coord_balance_dtype_promotion(dtype):
+    """bf16 inputs are promoted to f32 before the scan; signs must match the
+    reference run on the same promoted values exactly."""
+    rng = np.random.default_rng(11)
+    zp = jnp.asarray(rng.normal(size=(6, 64)), dtype)
+    zc = jnp.asarray(rng.normal(size=(6, 64)), dtype)
+    s0 = jnp.asarray(rng.normal(size=(64,)), dtype)
+    signs_k, s_k = coord_balance(s0, zp, zc, interpret=True)
+    signs_r, s_r = coord_balance_ref(s0.astype(jnp.float32),
+                                     zp.astype(jnp.float32),
+                                     zc.astype(jnp.float32))
+    assert s_k.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(signs_k), np.asarray(signs_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_coord_balance_matches_coordinated_pair_signs_dispatch():
+    """The core-layer dispatcher and the kernel agree on both impls."""
+    from repro.core.distributed import coordinated_pair_signs
+    rng = np.random.default_rng(12)
+    zs = jnp.asarray(rng.normal(size=(7, 50)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(50,)), jnp.float32)
+    s_x, signs_x = coordinated_pair_signs(s0, zs, impl="xla")
+    s_p, signs_p = coordinated_pair_signs(s0, zs, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(signs_x), np.asarray(signs_p))
+    np.testing.assert_allclose(np.asarray(s_x), np.asarray(s_p),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("B,H,T,DK,DV", [

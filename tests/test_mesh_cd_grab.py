@@ -1,0 +1,114 @@
+"""Device-count-parameterized equivalence tests for mesh-native CD-GraB.
+
+JAX locks the device count at first init, so each device count gets a real
+multi-device CPU mesh in its own subprocess
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``, see
+``tests/_mesh_worker.py``). The worker runs every check on seeded inputs and
+reports JSON; the assertions here pin down that
+
+* ``mesh_pair_signs`` (all-gather + replicated scan) is bit-identical to the
+  ``coordinated_pair_signs`` host scan at every device count,
+* the result is invariant to the DP shard layout — 1, 2, 4 and 8-way row
+  sharding all produce the same bits,
+* the Pallas ``coord_balance`` kernel bit-matches the same host scan,
+* the Alweiss balancer under CD-GraB consumes one replicated PRNG stream
+  (identical signs on every shard — the replicated-key invariant documented
+  in ``core/distributed.py``),
+* the full device step ``grab_step_workers(mesh=...)`` equals the
+  host-simulated path.
+"""
+import functools
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import _mesh_worker as mw
+
+DEVICE_COUNTS = (2, 4, 8)
+_REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@functools.lru_cache(maxsize=None)
+def worker(n_dev: int) -> dict:
+    env = os.environ.copy()
+    env.pop("XLA_FLAGS", None)            # the worker sets its own
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(_REPO_SRC)] + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "_mesh_worker.py"), str(n_dev)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, f"worker[{n_dev}] failed:\n{proc.stderr[-3000:]}"
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+@functools.lru_cache(maxsize=None)
+def host_reference():
+    """The single-device host scan on the worker's exact inputs."""
+    from repro.core.distributed import coordinated_pair_signs
+    zs, s0, _ = mw._inputs()
+    s, signs = coordinated_pair_signs(jnp.asarray(s0), jnp.asarray(zs),
+                                      impl="xla")
+    return np.asarray(signs), np.asarray(s)
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+def test_mesh_signs_bit_match_host_scan(n_dev):
+    out = worker(n_dev)
+    assert out["det_bitmatch"], out
+    assert out["det_replicated"], "outputs differ across device replicas"
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+def test_pallas_kernel_bit_matches_host_scan(n_dev):
+    out = worker(n_dev)
+    assert out["pallas_sign_bitmatch"], out
+    assert out["pallas_s_close"], out
+
+
+def test_mesh_signs_invariant_to_shard_layout():
+    """1-way (this process), 2-, 4- and 8-way row sharding: same bits."""
+    signs_ref, s_ref = host_reference()
+    for n_dev in DEVICE_COUNTS:
+        out = worker(n_dev)
+        assert np.array_equal(np.asarray(out["det_signs"]), signs_ref), n_dev
+        # f32 -> JSON double round-trip is exact, so this is a bit compare
+        assert np.array_equal(
+            np.asarray(out["det_s"], np.float32), s_ref), n_dev
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+def test_alweiss_replicated_key_invariant(n_dev):
+    """Every shard consumes the same PRNG stream: signs are identical on all
+    shards and equal to the host scan with the same key."""
+    out = worker(n_dev)
+    assert out["alweiss_replicated"], "shard-dependent randomness detected"
+    assert out["alweiss_bitmatch"], out
+
+
+def test_alweiss_signs_agree_across_device_counts():
+    base = worker(DEVICE_COUNTS[0])["alweiss_signs"]
+    for n_dev in DEVICE_COUNTS[1:]:
+        assert worker(n_dev)["alweiss_signs"] == base, n_dev
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+def test_grab_step_workers_mesh_matches_host(n_dev):
+    out = worker(n_dev)
+    assert out["step_bitmatch"], out
+
+
+def test_grab_step_workers_signs_agree_across_device_counts():
+    base = worker(DEVICE_COUNTS[0])["step_signs"]
+    for n_dev in DEVICE_COUNTS[1:]:
+        assert worker(n_dev)["step_signs"] == base, n_dev
+    # stash steps emit zeros, balance steps emit full +-1 rows
+    arr = np.asarray(base)
+    assert np.array_equal(arr[0::2], np.zeros_like(arr[0::2]))
+    assert set(np.unique(arr[1::2])) <= {-1, 1}
