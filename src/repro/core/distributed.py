@@ -93,13 +93,27 @@ def signs_from_pair_signs(pair_signs: jax.Array) -> jax.Array:
     return jnp.stack([pair_signs, -pair_signs], axis=1).reshape(-1)
 
 
+_COORD_IMPLS = ("pallas", "xla")
+
+
+def _validate_impl(impl: str, source: str) -> str:
+    if impl not in _COORD_IMPLS:
+        raise ValueError(
+            f"{source}={impl!r} is not a known coordinated-scan "
+            f"implementation; allowed values: {list(_COORD_IMPLS)}")
+    return impl
+
+
 def _coord_impl() -> str:
     """Resolve the coordinated-scan implementation: REPRO_COORD_IMPL wins,
-    else the Pallas kernel on a real TPU backend and XLA everywhere else."""
+    else the Pallas kernel on a real TPU backend and XLA everywhere else.
+    Unknown values raise instead of silently falling through to the XLA
+    scan (a typo like ``REPRO_COORD_IMPL=palas`` would otherwise quietly
+    skip the kernel)."""
     impl = os.environ.get("REPRO_COORD_IMPL")
     if impl is None:
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
-    return impl
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return _validate_impl(impl, "REPRO_COORD_IMPL")
 
 
 def coordinated_pair_signs(s: jax.Array, zs: jax.Array, *,
@@ -123,6 +137,8 @@ def coordinated_pair_signs(s: jax.Array, zs: jax.Array, *,
     """
     if impl is None:
         impl = _coord_impl()
+    else:
+        _validate_impl(impl, "impl")
     if impl == "pallas" and kind == "deterministic":
         from repro.kernels.ops import coord_balance
         signs, new_s = coord_balance(s, zs)

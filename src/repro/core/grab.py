@@ -72,30 +72,65 @@ class Sketch(NamedTuple):
     256-chip mesh)."""
     leaf_idx: tuple          # tuple of tuples-of-int-arrays, one per leaf
 
+    @property
+    def dim(self) -> int:
+        """Realized sketch width: min(k, total params) coordinates."""
+        total = 0
+        for idx in self.leaf_idx:
+            if idx is None:
+                continue
+            total += int(idx[0].size) if len(idx) else 1
+        return total
+
     def apply(self, tree) -> jax.Array:
         leaves = jax.tree.leaves(tree)
-        parts = [leaf[idx].astype(jnp.float32)
-                 for leaf, idx in zip(leaves, self.leaf_idx)
-                 if idx is not None and idx[0].size]
+        parts = []
+        for leaf, idx in zip(leaves, self.leaf_idx):
+            if idx is None:
+                continue
+            # 0-d leaves carry an empty index tuple: the coordinate is the
+            # scalar itself (gather-indexing a 0-d array is not expressible).
+            part = leaf[idx] if len(idx) else jnp.reshape(leaf, (1,))
+            parts.append(jnp.reshape(part, (-1,)).astype(jnp.float32))
         return jnp.concatenate(parts)
 
 
 def make_sketch(tree, k: int, seed: int = 0) -> Sketch:
-    """Sample ~k coordinates, allocated to leaves proportionally to size."""
+    """Sample min(k, total) coordinates, allocated to leaves ~proportionally
+    to size.
+
+    The proportional floor allocation leaves a remainder; it is redistributed
+    only to leaves with headroom (alloc < size) so no draw is ever clamped
+    away — a largest-leaves round-robin can land on already-full leaves and
+    silently return fewer than ``min(k, total)`` coordinates, which shows up
+    later as a shape mismatch against the [k] running sum on tiny models.
+    The invariant ``sum(alloc) == min(k, total)`` is asserted.
+    """
     rng = np.random.default_rng(seed)
     leaves = jax.tree.leaves(tree)
     sizes = np.array([int(l.size) for l in leaves], dtype=np.int64)
-    total = sizes.sum()
-    alloc = np.maximum((sizes * k) // max(total, 1), 0)
-    # round-robin the remainder to the largest leaves
-    deficit = k - int(alloc.sum())
-    for i in np.argsort(-sizes)[: max(deficit, 0)]:
-        alloc[i] += 1
+    total = int(sizes.sum())
+    target = min(int(k), total)
+    alloc = np.minimum(np.maximum((sizes * k) // max(total, 1), 0), sizes)
+    # redistribute the remainder to leaves with headroom, largest headroom
+    # first (each pass allocates min(deficit, #leaves-with-headroom) slots,
+    # so this terminates in a handful of passes)
+    deficit = target - int(alloc.sum())
+    while deficit > 0:
+        headroom = sizes - alloc
+        cand = np.flatnonzero(headroom > 0)
+        take = cand[np.argsort(-headroom[cand], kind="stable")][:deficit]
+        alloc[take] += 1
+        deficit = target - int(alloc.sum())
+    assert int(alloc.sum()) == target, (int(alloc.sum()), target)
     idxs = []
     for leaf, size, a in zip(leaves, sizes, alloc):
-        a = int(min(a, size))
+        a = int(a)
         if not a:
             idxs.append(None)
+            continue
+        if leaf.ndim == 0:       # 0-d leaf: the one coordinate is the scalar
+            idxs.append(())
             continue
         flat = np.sort(rng.choice(size, size=a, replace=False))
         nd = np.unravel_index(flat, leaf.shape)
@@ -301,7 +336,13 @@ def expand_pair_signs(signs: np.ndarray) -> np.ndarray:
         return np.stack([expand_pair_signs(signs[:, w])
                          for w in range(signs.shape[1])], axis=1)
     signs = signs.reshape(-1)
-    assert signs.shape[0] % 2 == 0
+    if signs.shape[0] % 2 != 0:
+        raise ValueError(
+            f"expand_pair_signs needs an even-length sign stream, got "
+            f"{signs.shape[0]} steps: pair balancing emits one sign per "
+            f"(stash, balance) step pair, so a partial epoch must either run "
+            f"an even number of steps or drop the trailing stash step before "
+            f"expanding")
     pair = signs[1::2]
     out = np.empty_like(signs)
     out[0::2] = pair

@@ -46,6 +46,29 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 TILE_W = 8
+# Chunked-k path: stream the sketched rows through VMEM CHUNK_K lanes at a
+# time once the full-k tiles of the plain kernel would blow the VMEM budget
+# (~k > 60K at TILE_W=8 — the ROADMAP's unexercised k > 64K case).
+CHUNK_K = 65_536
+# Conservative usable-VMEM budget (of ~16 MiB/core on v5e): leave headroom
+# for pallas pipeline buffers and whatever else the step has resident.
+VMEM_LIMIT_BYTES = 8 * 2**20
+
+
+def plain_vmem_bytes(w_padded: int, k_padded: int) -> int:
+    """VMEM footprint estimate of :func:`coord_balance_pallas`: the s0 block,
+    the running-sum scratch, the s_out block (each [1, k], revisited — single
+    buffered) and the double-buffered [TILE_W, k] z_prev/z_cur tiles."""
+    del w_padded  # signs tile is noise next to the k-sized buffers
+    return 4 * k_padded * (3 + 2 * 2 * TILE_W)
+
+
+def chunked_vmem_bytes(k_padded: int, chunk_k: int) -> int:
+    """VMEM footprint estimate of :func:`coord_balance_chunked_pallas`: the
+    full-k running-sum scratch plus six double-buffered [1, chunk_k] blocks
+    (s0, s_out, and the two z operands each streamed twice — current row and
+    deferred previous row)."""
+    return 4 * (k_padded + 2 * 6 * chunk_k)
 
 
 def _coord_balance_kernel(s0_ref, zp_ref, zc_ref, signs_ref, s_out_ref,
@@ -106,4 +129,102 @@ def coord_balance_pallas(s0: jax.Array, z_prev: jax.Array, z_cur: jax.Array,
         scratch_shapes=[pltpu.VMEM((1, k), jnp.float32)],
         interpret=interpret,
     )(s0_2d, z_prev, z_cur)
+    return signs, s_out.reshape(k)
+
+
+def _coord_balance_chunked_kernel(s0_ref, zp_ref, zc_ref, zp_prev_ref,
+                                  zc_prev_ref, signs_ref, s_out_ref,
+                                  s_scratch, acc_ref, eps_ref):
+    w = pl.program_id(0)
+    c = pl.program_id(1)
+    n_rows = pl.num_programs(0) - 1          # last grid row is the flush pass
+    n_chunks = pl.num_programs(1)
+    ck = s0_ref.shape[1]
+    sl = pl.ds(c * ck, ck)
+
+    @pl.when(w == 0)
+    def _init():
+        s_scratch[0, sl] = s0_ref[0, :]
+
+    # Row w-1's axpy is deferred to row w's sweep: when its sign was decided
+    # (after chunk C-1) the earlier chunks of z_{w-1} were no longer
+    # resident, so each (w, c) step first folds eps_{w-1} * z_{w-1,c} into
+    # the running-sum chunk it is about to read. The ghost row w == n_rows
+    # exists purely to apply the last row's pending axpy and flush s.
+    @pl.when(w > 0)
+    def _deferred_axpy():
+        z_prev_row = zp_prev_ref[0, :] - zc_prev_ref[0, :]
+        s_scratch[0, sl] = s_scratch[0, sl] + eps_ref[0] * z_prev_row
+
+    @pl.when(w < n_rows)
+    def _dot_and_sign():
+        @pl.when(c == 0)
+        def _reset():
+            acc_ref[0] = 0.0
+
+        z_row = zp_ref[0, :] - zc_ref[0, :]
+        acc_ref[0] += jnp.sum(s_scratch[0, sl] * z_row)
+
+        @pl.when(c == n_chunks - 1)
+        def _sign():
+            eps = jnp.where(acc_ref[0] <= 0.0, 1.0, -1.0).astype(jnp.float32)
+            signs_ref[0] = eps
+            eps_ref[0] = eps
+
+    @pl.when(w == n_rows)
+    def _flush():
+        s_out_ref[0, :] = s_scratch[0, sl]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_k", "interpret"))
+def coord_balance_chunked_pallas(s0: jax.Array, z_prev: jax.Array,
+                                 z_cur: jax.Array, *, chunk_k: int,
+                                 interpret: bool = True):
+    """Chunked-k fused coordinated pair-balance scan.
+
+    Same contract as :func:`coord_balance_pallas`, for k too large to hold
+    TILE_W full-k z tiles in VMEM: only the [k] running sum stays resident
+    (a VMEM scratch addressed per chunk); the z rows stream through
+    [1, chunk_k] blocks on a (W+1, k // chunk_k) grid, one worker row per
+    outer step. Per row the chunk sweep accumulates the balance dot in SMEM;
+    the sign lands after the last chunk, so the row's axpy is *deferred* to
+    the next row's sweep (the z operands are streamed twice — current row
+    and previous row — which is what keeps every chunk touched exactly when
+    it is resident). The trailing ghost row applies the final pending axpy
+    and flushes the sum.
+
+    The dot is accumulated chunk-by-chunk, so at near-ties its f32 rounding
+    can differ from the single full-k reduction of the plain kernel — same
+    caveat as any blocked reduction.
+    """
+    w, k = z_prev.shape
+    assert z_cur.shape == (w, k), (z_prev.shape, z_cur.shape)
+    assert chunk_k % 128 == 0 and k % chunk_k == 0, (k, chunk_k)
+    n_chunks = k // chunk_k
+    s0_2d = s0.reshape(1, k)
+    row = lambda i, c: (jnp.minimum(i, w - 1), c)      # ghost reads row W-1
+    prev_row = lambda i, c: (jnp.maximum(i - 1, 0), c)  # deferred-axpy rows
+    signs, s_out = pl.pallas_call(
+        _coord_balance_chunked_kernel,
+        grid=(w + 1, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk_k), lambda i, c: (0, c)),   # s0 chunk
+            pl.BlockSpec((1, chunk_k), row),                   # z_prev row
+            pl.BlockSpec((1, chunk_k), row),                   # z_cur row
+            pl.BlockSpec((1, chunk_k), prev_row),              # z_prev row-1
+            pl.BlockSpec((1, chunk_k), prev_row),              # z_cur row-1
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, c: (jnp.minimum(i, w - 1),)),  # signs
+            pl.BlockSpec((1, chunk_k), lambda i, c: (0, c)),    # s_out chunk
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w,), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, k), jnp.float32),
+                        pltpu.SMEM((1,), jnp.float32),
+                        pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(s0_2d, z_prev, z_cur, z_prev, z_cur)
     return signs, s_out.reshape(k)

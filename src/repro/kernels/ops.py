@@ -13,7 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.balance import TILE_M, balance_scan_pallas
-from repro.kernels.coord_balance import TILE_W, coord_balance_pallas
+from repro.kernels.coord_balance import (CHUNK_K, TILE_W, VMEM_LIMIT_BYTES,
+                                         chunked_vmem_bytes,
+                                         coord_balance_chunked_pallas,
+                                         coord_balance_pallas,
+                                         plain_vmem_bytes)
 from repro.kernels.lin_scan import CHUNK, gla_scan_pallas
 from repro.kernels import ref
 
@@ -45,8 +49,48 @@ def balance_scan(s0: jax.Array, g: jax.Array, interpret: bool | None = None):
     return signs[:m].astype(jnp.int32), s_out[:k]
 
 
+def _coord_vmem_budget(vmem_budget: int | None) -> int:
+    if vmem_budget is not None:
+        return vmem_budget
+    env = os.environ.get("REPRO_COORD_VMEM_BUDGET")
+    if env is not None:
+        try:
+            return int(env)
+        except ValueError as e:
+            raise ValueError(
+                f"REPRO_COORD_VMEM_BUDGET={env!r} is not an integer byte "
+                f"count") from e
+    return VMEM_LIMIT_BYTES
+
+
+def select_coord_impl(w: int, k: int, chunk_k: int | None = None,
+                      vmem_budget: int | None = None):
+    """VMEM-budget guard for :func:`coord_balance`: pick the kernel variant
+    whose footprint fits.
+
+    Returns ("plain", None) for the full-k tiled kernel, ("chunked", ck) for
+    the streamed chunked-k kernel, or ("ref", None) when even the chunked
+    form's running sum would not fit — the caller falls back to the pure-jnp
+    oracle so the scan stays correct at any k. An explicit ``chunk_k``
+    forces the chunked path unconditionally (tests exercise the chunk
+    boundary at small k; the budget only steers the automatic choice).
+    """
+    kp = _round_up(max(k, 128), 128)
+    if chunk_k is not None:
+        return "chunked", _round_up(min(chunk_k, kp), 128)
+    budget = _coord_vmem_budget(vmem_budget)
+    wp = _round_up(max(w, TILE_W), TILE_W)
+    if plain_vmem_bytes(wp, kp) <= budget:
+        return "plain", None
+    ck = _round_up(min(CHUNK_K, kp), 128)
+    if chunked_vmem_bytes(_round_up(kp, ck), ck) <= budget:
+        return "chunked", ck
+    return "ref", None
+
+
 def coord_balance(s0: jax.Array, z_prev: jax.Array, z_cur: jax.Array | None = None,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, *, chunk_k: int | None = None,
+                  vmem_budget: int | None = None):
     """Fused CD-GraB coordinated pair-balance scan (the W-row sequential
     inner loop of ``core.distributed.coordinated_pair_signs``).
 
@@ -60,12 +104,35 @@ def coord_balance(s0: jax.Array, z_prev: jax.Array, z_cur: jax.Array | None = No
     Pads W to a TILE_W multiple with zero rows (dot 0 -> sign +1, the sum is
     unperturbed) and k to the 128-lane multiple; bf16 inputs are promoted to
     f32 before the scan (sign decisions are not robust in bf16).
+
+    VMEM-budget guard (:func:`select_coord_impl`): when the full-k tiles
+    would not fit (k > ~60K at the default budget), the scan switches to the
+    chunked-k kernel (``coord_balance_chunked_pallas`` — only the running
+    sum stays VMEM-resident, rows stream chunk_k lanes at a time), and past
+    even that budget it falls back to the pure-jnp oracle, so results stay
+    correct at any k. ``chunk_k`` forces the chunked path; ``vmem_budget``
+    (or ``REPRO_COORD_VMEM_BUDGET``) overrides the byte budget.
     """
     if z_cur is None:
         return balance_scan(s0, z_prev, interpret=interpret)
     if interpret is None:
         interpret = _default_interpret()
     w, k = z_prev.shape
+    impl, ck = select_coord_impl(w, k, chunk_k=chunk_k,
+                                 vmem_budget=vmem_budget)
+    if impl == "ref":
+        signs, s_out = ref.coord_balance_ref(s0, z_prev, z_cur)
+        return signs.astype(jnp.int32), s_out
+    if impl == "chunked":
+        kp = _round_up(max(k, ck), ck)
+        zp = jnp.zeros((w, kp), jnp.float32).at[:, :k].set(
+            z_prev.astype(jnp.float32))
+        zc = jnp.zeros((w, kp), jnp.float32).at[:, :k].set(
+            z_cur.astype(jnp.float32))
+        sp = jnp.zeros((kp,), jnp.float32).at[:k].set(s0.astype(jnp.float32))
+        signs, s_out = coord_balance_chunked_pallas(sp, zp, zc, chunk_k=ck,
+                                                    interpret=interpret)
+        return signs.astype(jnp.int32), s_out[:k]
     wp, kp = _round_up(max(w, TILE_W), TILE_W), _round_up(max(k, 128), 128)
     zp = jnp.zeros((wp, kp), jnp.float32).at[:w, :k].set(
         z_prev.astype(jnp.float32))

@@ -30,9 +30,11 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, cell_applicable
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import (analyze_hlo, model_flops, roofline_terms,
+from repro.launch.roofline import (SIGN_TOL, analyze_hlo, model_flops,
+                                   roofline_terms, sign_collective_delta,
+                                   sign_collective_hlo_terms,
                                    sign_collective_terms)
-from repro.launch.sharding import ShardPolicy
+from repro.launch.sharding import CD_GRAB_CANDIDATES, ShardPolicy
 from repro.launch.specs import make_cell
 from repro.models.config import SHAPES, SHAPES_BY_NAME
 
@@ -40,8 +42,15 @@ from repro.models.config import SHAPES, SHAPES_BY_NAME
 def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
              keep_hlo=False, n_micro=None, sketch_dim=0, use_grab=True,
              pad_heads=False, quant8=False, ordering=None,
-             workers=None) -> dict:
-    cfg, _ = get_config(arch)
+             workers=None, cd_constraints=None, smoke=False,
+             sign_tol=SIGN_TOL) -> dict:
+    """Lower + compile one cell; for cd-grab cells, hillclimb over the
+    ``CD_GRAB_CANDIDATES`` explicit-constraint sets (compile each, keep the
+    one with the fewest measured HLO collective bytes per device) and
+    cross-check the analytic sign-collective terms against the HLO-isolated
+    [W, k] all-gathers. ``cd_constraints`` pins one candidate (no sweep)."""
+    full_cfg, smoke_cfg = get_config(arch)
+    cfg = smoke_cfg if smoke else full_cfg
     shape = SHAPES_BY_NAME[shape_name]
     ok, reason = cell_applicable(cfg, shape)
     rec = {"arch": arch, "shape": shape_name,
@@ -59,30 +68,85 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
     try:
         kw = {"sketch_dim": sketch_dim, "use_grab": use_grab,
               "pad_heads": pad_heads, "quant8": quant8,
-              "ordering": ordering, "workers": workers}
+              "ordering": ordering, "workers": workers, "smoke": smoke}
         if n_micro is not None:
             kw["n_micro"] = n_micro
-        step_fn, abs_args, in_shardings, donate, meta = make_cell(
-            arch, shape_name, mesh, policy, **kw)
+        cd_grab = ordering in ("cd-grab", "cd_grab", "cdgrab")
+        n_dev = mesh.devices.size
         from jax.sharding import NamedSharding, PartitionSpec
-        in_shardings = jax.tree.map(
-            lambda s: NamedSharding(mesh, s), in_shardings,
-            is_leaf=lambda x: isinstance(x, PartitionSpec))
-        with mesh:
-            jitted = jax.jit(step_fn, in_shardings=in_shardings,
-                             donate_argnums=donate)
-            lowered = jitted.lower(*abs_args)
-            t_lower = time.time() - t0
-            compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+
+        def compile_candidate(cand):
+            t_start = time.time()
+            step_fn, abs_args, in_shardings, donate, meta = make_cell(
+                arch, shape_name, mesh, policy, cd_constraints=cand, **kw)
+            shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), in_shardings,
+                is_leaf=lambda x: isinstance(x, PartitionSpec))
+            with mesh:
+                jitted = jax.jit(step_fn, in_shardings=shardings,
+                                 donate_argnums=donate)
+                lowered = jitted.lower(*abs_args)
+                t_lower = time.time() - t_start
+                compiled = lowered.compile()
+                t_compile = time.time() - t_start - t_lower
+            hlo = compiled.as_text()
+            fp = None
+            if meta.get("cd_grab"):
+                cg = meta["cd_grab"]
+                fp = (cg["n_workers"], cg["sketch_dim"], cg["group"])
+            hc = analyze_hlo(hlo, n_dev, sign_fingerprint=fp)
+            return {"cand": cand, "meta": meta, "compiled": compiled,
+                    "hlo": hlo, "hc": hc, "t_lower": t_lower,
+                    "t_compile": t_compile}
+
+        if cd_grab and cd_constraints is None:
+            # measured-best: fewest ring-model collective bytes per device;
+            # ties keep the weakest constraint set (sweep order). Only the
+            # current best's executable + HLO text stay alive — on
+            # production-size cells each is large, so losers are dropped as
+            # soon as they are beaten.
+            best = None
+            candidates = []
+            for cand_name in CD_GRAB_CANDIDATES:
+                r = compile_candidate(cand_name)
+                candidates.append({
+                    "constraints": r["cand"],
+                    "collective_bytes_per_dev": r["hc"].coll.bytes_moved,
+                    "allgather_bytes_per_dev":
+                        r["hc"].coll.by_kind.get("all-gather", 0.0),
+                    "sign_allgather_bytes_per_dev_hlo":
+                        r["hc"].sign.bytes_moved,
+                    # all-gather traffic beyond the sign dataflow itself:
+                    # the stash/grad resharding XLA chose under this
+                    # candidate (the FSDP param gathers are a constant
+                    # pedestal across candidates, so deltas are
+                    # attributable)
+                    "extra_allgather_bytes_per_dev":
+                        r["hc"].coll.by_kind.get("all-gather", 0.0)
+                        - r["hc"].sign.bytes_moved,
+                    "compile_s": round(r["t_compile"], 1),
+                })
+                if (best is None
+                        or r["hc"].coll.bytes_moved < best["hc"].coll.bytes_moved):
+                    if best is not None:
+                        best.clear()
+                    best = r
+                else:
+                    r.clear()
+        else:
+            best = compile_candidate(cd_constraints)
+            candidates = None
+
+        meta = best["meta"]
+        compiled = best["compiled"]
+        hlo = best["hlo"]
+        hc = best["hc"]
+        t_lower, t_compile = best["t_lower"], best["t_compile"]
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         if isinstance(cost, (list, tuple)):   # newer jax: one dict per program
             cost = cost[0] if cost else {}
-        hlo = compiled.as_text()
-        n_dev = mesh.devices.size
-        hc = analyze_hlo(hlo, n_dev)
         coll = hc.coll
 
         flops = hc.flops
@@ -135,9 +199,30 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
         )
         if meta.get("cd_grab"):
             # CD-GraB: the sign all-gather as first-class roofline terms,
-            # attributable next to the HLO-parsed collective totals.
-            rec["cd_grab"] = meta["cd_grab"]
-            rec.update(sign_collective_terms(**meta["cd_grab"]))
+            # attributable next to the HLO-parsed collective totals — both
+            # the analytic model and the HLO-isolated [W, k] all-gathers,
+            # which must agree (the fingerprinted measurement is what makes
+            # "coordination is ~free" a checked claim, not an assertion).
+            cg = dict(meta["cd_grab"])
+            rec["cd_grab"] = cg
+            if candidates is not None:
+                cg["candidates"] = candidates
+            rec.update(sign_collective_terms(
+                n_workers=cg["n_workers"], sketch_dim=cg["sketch_dim"],
+                pair_steps=cg["pair_steps"], group=cg["group"]))
+            rec.update(sign_collective_hlo_terms(hc.sign))
+            delta = sign_collective_delta(
+                rec["sign_collective_bytes_per_dev"],
+                rec["sign_collective_bytes_per_dev_hlo"])
+            rec["sign_collective_delta"] = round(delta, 4)
+            if delta > sign_tol:
+                rec.update(status="fail", reason=(
+                    f"sign-collective analytic vs HLO delta {delta:.1%} > "
+                    f"{sign_tol:.0%}: analytic "
+                    f"{rec['sign_collective_bytes_per_dev']:.0f}B/dev "
+                    f"({rec['sign_collective_count']}x), HLO "
+                    f"{rec['sign_collective_bytes_per_dev_hlo']:.0f}B/dev "
+                    f"({rec['sign_collective_count_hlo']}x)"))
         if keep_hlo:
             rec["hlo_path"] = _dump_hlo(arch, shape_name, rec["mesh"], hlo)
         if verbose:
@@ -146,8 +231,13 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
             sign = ""
             if "sign_collective_s" in rec:
                 sign = (f" sign-coll={rec['sign_collective_s']*1e6:.1f}us"
-                        f"/{rec['sign_collective_bytes_per_dev']/1e3:.0f}KB")
-            print(f"[dryrun] {arch} x {shape_name} [{rec['mesh']}] OK "
+                        f"/{rec['sign_collective_bytes_per_dev']/1e3:.0f}KB"
+                        f" hlo-delta={rec['sign_collective_delta']:.1%}")
+            if rec.get("cd_grab", {}).get("candidates"):
+                sign += (f" constraints={rec['cd_grab']['constraints']}"
+                         f"/{len(rec['cd_grab']['candidates'])}cand")
+            print(f"[dryrun] {arch} x {shape_name} [{rec['mesh']}] "
+                  f"{rec['status'].upper()} "
                   f"compile={t_compile:.0f}s "
                   f"mem/dev={(hbm)/2**30:.2f}GiB "
                   f"compute={terms['compute_s']*1e3:.2f}ms "
@@ -176,7 +266,7 @@ def _dump_hlo(arch, shape, mesh, hlo) -> str:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
-    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true",
@@ -192,6 +282,16 @@ def main():
                          "the production mesh (W workers over 'data')")
     ap.add_argument("--workers", type=int, default=None,
                     help="cd-grab worker count W (default: data-axis size)")
+    ap.add_argument("--cd-constraints", choices=CD_GRAB_CANDIDATES,
+                    default=None,
+                    help="pin one micro_workers constraint set instead of "
+                         "hillclimbing over all candidates (cd-grab cells)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the arch's SMOKE config (CI-scale cells)")
+    ap.add_argument("--smoke-mesh", default=None, metavar="DxM",
+                    help="build a small DxM ('data' x 'model') mesh from the "
+                         "forced host devices instead of the production mesh "
+                         "(e.g. 4x1 — CI runs the cd-grab dry-run cell on it)")
     ap.add_argument("--sketch-dim", type=int, default=0)
     ap.add_argument("--pad-heads", action="store_true",
                     help="pad GQA query heads per group to divide TP")
@@ -216,7 +316,14 @@ def main():
         cells = [(args.arch, args.shape)]
 
     meshes = []
-    if args.both_meshes:
+    if args.smoke_mesh:
+        # one explicit small mesh: the pod-count axis is meaningless here
+        # (and --both-meshes would compile every cell twice onto the same
+        # mesh, the second pass clobbering the first's JSON)
+        assert not (args.both_meshes or args.multi_pod), \
+            "--smoke-mesh is exclusive with --multi-pod/--both-meshes"
+        meshes = [False]
+    elif args.both_meshes:
         meshes = [False, True]
     else:
         meshes = [args.multi_pod]
@@ -227,15 +334,25 @@ def main():
 
     results = []
     for multi_pod in meshes:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        if args.smoke_mesh:
+            d, m = (int(x) for x in args.smoke_mesh.split("x"))
+            from jax.sharding import Mesh
+            mesh = Mesh(np.asarray(jax.devices()[:d * m]).reshape(d, m),
+                        ("data", "model"))
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
         for arch, shape in cells:
             rec = run_cell(arch, shape, mesh, policy, keep_hlo=args.keep_hlo,
                            n_micro=args.n_micro, sketch_dim=args.sketch_dim,
                            use_grab=not args.no_grab, pad_heads=args.pad_heads,
                            quant8=args.quant8, ordering=ordering,
-                           workers=args.workers)
+                           workers=args.workers,
+                           cd_constraints=args.cd_constraints,
+                           smoke=args.smoke)
             results.append(rec)
             tag = "multipod" if multi_pod else "singlepod"
+            if args.smoke_mesh:
+                tag = f"smokemesh{args.smoke_mesh}"
             if ordering and ordering != "grab":
                 tag += "_" + ordering.replace("-", "")
             if args.tag:

@@ -29,6 +29,9 @@ from typing import Dict, List, Optional, Tuple
 PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
 HBM_BW = 819e9             # bytes / s / chip
 ICI_BW = 50e9              # bytes / s / link
+# Analytic-vs-HLO sign-collective tolerance: dry-run records and the mesh
+# tests both enforce this one threshold (see sign_collective_delta).
+SIGN_TOL = 0.10
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -93,31 +96,63 @@ class CollectiveStats:
     by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
+def _scaled_coll(c: CollectiveStats, k: float) -> CollectiveStats:
+    return CollectiveStats(c.bytes_moved * k, c.raw_bytes * k,
+                           int(c.count * k),
+                           {kk: v * k for kk, v in c.by_kind.items()})
+
+
+def _add_coll(a: CollectiveStats, o: CollectiveStats):
+    a.bytes_moved += o.bytes_moved
+    a.raw_bytes += o.raw_bytes
+    a.count += o.count
+    for k, v in o.by_kind.items():
+        a.by_kind[k] = a.by_kind.get(k, 0.0) + v
+
+
 @dataclasses.dataclass
 class HloCost:
     flops: float = 0.0
     hbm_bytes: float = 0.0
     coll: CollectiveStats = dataclasses.field(default_factory=CollectiveStats)
+    # CD-GraB sign dataflow, isolated from the compiled HLO by fingerprint
+    # (all-gather ops producing f32[W, k] over a ``group``-sized replica
+    # group — see ``analyze_hlo(sign_fingerprint=...)``): the measured
+    # counterpart of the analytic ``sign_collective_terms``.
+    sign: CollectiveStats = dataclasses.field(default_factory=CollectiveStats)
 
     def scaled(self, k: float, bytes_too: bool) -> "HloCost":
-        c = CollectiveStats(self.coll.bytes_moved * k, self.coll.raw_bytes * k,
-                            int(self.coll.count * k),
-                            {kk: v * k for kk, v in self.coll.by_kind.items()})
         return HloCost(self.flops * k,
-                       self.hbm_bytes * k if bytes_too else 0.0, c)
+                       self.hbm_bytes * k if bytes_too else 0.0,
+                       _scaled_coll(self.coll, k), _scaled_coll(self.sign, k))
 
     def add(self, o: "HloCost"):
         self.flops += o.flops
         self.hbm_bytes += o.hbm_bytes
-        self.coll.bytes_moved += o.coll.bytes_moved
-        self.coll.raw_bytes += o.coll.raw_bytes
-        self.coll.count += o.coll.count
-        for k, v in o.coll.by_kind.items():
-            self.coll.by_kind[k] = self.coll.by_kind.get(k, 0.0) + v
+        _add_coll(self.coll, o.coll)
+        _add_coll(self.sign, o.sign)
 
 
-def analyze_hlo(hlo_text: str, total_devices: int) -> HloCost:
-    """Trip-count-aware FLOPs / HBM-bytes / collective analysis."""
+def _copy_coll(c: CollectiveStats) -> CollectiveStats:
+    return CollectiveStats(c.bytes_moved, c.raw_bytes, c.count,
+                           dict(c.by_kind))
+
+
+def analyze_hlo(hlo_text: str, total_devices: int,
+                sign_fingerprint: Optional[Tuple[int, int, int]] = None) -> HloCost:
+    """Trip-count-aware FLOPs / HBM-bytes / collective analysis.
+
+    ``sign_fingerprint``: optional ``(W, k, group)`` — when given, every
+    all-gather whose result contains an f32[W, k] operand AND whose replica
+    groups have exactly ``group`` participants is additionally accumulated
+    into ``HloCost.sign`` (trip-count-folded like everything else). This
+    isolates CD-GraB's ``mesh_pair_signs`` gather from the gradient/FSDP
+    collectives so the analytic ``sign_collective_terms`` can be
+    cross-checked against the compiled HLO. The fingerprint is shape-based:
+    an unrelated all-gather of an f32[W, k] tensor over a same-sized group
+    would be counted too, so pick a sketch width that no parameter slab
+    shares (the dry-run cells do).
+    """
     # --- split into computations (headers at column 0 ending with '{') ----
     comps: Dict[str, List[str]] = {}
     entry = None
@@ -191,6 +226,19 @@ def analyze_hlo(hlo_text: str, total_devices: int) -> HloCost:
                 cost.coll.raw_bytes += raw
                 cost.coll.count += 1
                 cost.coll.by_kind[base] = cost.coll.by_kind.get(base, 0.0) + moved
+                if (sign_fingerprint is not None and base == "all-gather"
+                        and g == sign_fingerprint[2]
+                        and any(dt == "f32" and dims == list(sign_fingerprint[:2])
+                                for dt, dims in _shape_dims(rtype))):
+                    # count only the [W, k] operand's bytes (a -start op's
+                    # tuple result would double the fingerprinted tensor)
+                    srb = sign_fingerprint[0] * sign_fingerprint[1] * 4
+                    smoved = srb * _ring_factor(base, g)
+                    cost.sign.bytes_moved += smoved
+                    cost.sign.raw_bytes += srb
+                    cost.sign.count += 1
+                    cost.sign.by_kind[base] = \
+                        cost.sign.by_kind.get(base, 0.0) + smoved
 
             # ---- HBM bytes: result + operands of non-free top-level ops --
             if opcode not in _FREE_OPS:
@@ -233,8 +281,7 @@ def analyze_hlo(hlo_text: str, total_devices: int) -> HloCost:
             return HloCost()
         d = direct.get(name, HloCost())
         out = HloCost(d.flops, d.hbm_bytes if with_bytes else 0.0,
-                      CollectiveStats(d.coll.bytes_moved, d.coll.raw_bytes,
-                                      d.coll.count, dict(d.coll.by_kind)))
+                      _copy_coll(d.coll), _copy_coll(d.sign))
         for child, trips, descend_bytes in edges.get(name, []):
             c = total(child, with_bytes and descend_bytes, stack + (name,))
             out.add(c.scaled(trips, bytes_too=True))
@@ -289,6 +336,29 @@ def sign_collective_terms(n_workers: int, sketch_dim: int, pair_steps: int,
         "sign_collective_count": pair_steps,
         "sign_collective_s": moved / ICI_BW,
     }
+
+
+def sign_collective_hlo_terms(sign: CollectiveStats) -> dict:
+    """The HLO-isolated counterpart of :func:`sign_collective_terms`:
+    roofline terms for the fingerprinted [W, k] all-gathers that
+    ``analyze_hlo(sign_fingerprint=...)`` pulled out of the compiled
+    module (trip-count-folded). Emitted next to the analytic terms so the
+    dry-run can fail loudly when model and measurement disagree."""
+    return {
+        "sign_collective_bytes_per_dev_hlo": sign.bytes_moved,
+        "sign_collective_count_hlo": sign.count,
+        "sign_collective_s_hlo": sign.bytes_moved / ICI_BW,
+    }
+
+
+def sign_collective_delta(analytic_bytes: float, hlo_bytes: float) -> float:
+    """Relative disagreement between the analytic and HLO-isolated sign
+    collective bytes, in [0, 1] (0 = exact agreement, 1 = one side is
+    zero)."""
+    hi = max(abs(analytic_bytes), abs(hlo_bytes))
+    if hi == 0:
+        return 0.0
+    return abs(analytic_bytes - hlo_bytes) / hi
 
 
 def model_flops(n_params: int, tokens_per_step: int,

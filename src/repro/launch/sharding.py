@@ -143,6 +143,47 @@ def state_specs(state, policy: ShardPolicy):
     return jax.tree_util.tree_map_with_path(spec, state)
 
 
+def _stack_worker_spec(spec: P, data_axis: str) -> P:
+    """Prepend the [W] worker axis to a per-worker spec: the worker rows are
+    the stash/gradient's data-parallel dimension, so any data-axis entry the
+    FSDP rules put on inner dims yields to it (a mesh axis may appear only
+    once per spec)."""
+    return P(data_axis, *(None if ax == data_axis else ax for ax in spec))
+
+
+# Candidate constraint sets for the cd-grab sharding hillclimb, weakest
+# first: which of the three [W, ...]-leading intermediates inside
+# ``micro_workers`` get an explicit with_sharding_constraint. "none" leaves
+# XLA's propagation alone (the seed behavior — its stash-vs-gradient
+# resharding choice shows up as unattributed all-gather bytes); the dry-run
+# compiles every candidate and keeps the one with the fewest measured HLO
+# collective bytes (see ``launch.dryrun.run_cell``).
+CD_GRAB_CANDIDATES = ("none", "slab", "slab_grads", "full")
+
+
+def cd_grab_slab_specs(batch_tree, *, data_axis: str = "data"):
+    """Specs for the per-timestep [W, micro, ...] batch slab inside the
+    ``micro_workers`` scan: worker rows over the data axis, everything else
+    replicated (the per-worker microbatch stays local to its shard)."""
+    return jax.tree.map(lambda _: P(data_axis), batch_tree)
+
+
+def cd_grab_stacked_grad_specs(params_tree, policy: ShardPolicy, *,
+                               data_axis: str = "data"):
+    """Specs for worker-stacked gradient-shaped pytrees ([W, ...param] —
+    the vmapped per-worker grads and the pair stash): the per-worker layout
+    follows the gradient rules (FSDP forced on, as in the launcher's
+    ``constrain_grads``), then the worker axis is prepended via
+    :func:`_stack_worker_spec`. This is the same rule
+    :func:`cd_grab_state_specs` applies to the stash carried in the
+    TrainState, so the in_shardings and the in-scan constraints can never
+    disagree."""
+    g_policy = dataclasses.replace(policy, fsdp=policy.fsdp or policy.zero1)
+    base = tree_specs(params_tree, g_policy)
+    return jax.tree.map(lambda s: _stack_worker_spec(s, data_axis), base,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def cd_grab_state_specs(state, policy: ShardPolicy, *,
                         data_axis: str = "data"):
     """Specs for a TrainState carrying CD-GraB's W-worker GraB state.
@@ -169,11 +210,9 @@ def cd_grab_state_specs(state, policy: ShardPolicy, *,
                             if is_stash(path) else leaf), state)
     base = state_specs(slim, policy)
 
-    def stack(spec):
-        return P(data_axis, *(None if ax == data_axis else ax for ax in spec))
-
     return jax.tree_util.tree_map_with_path(
-        lambda path, spec: stack(spec) if is_stash(path) else spec,
+        lambda path, spec: (_stack_worker_spec(spec, data_axis)
+                            if is_stash(path) else spec),
         base, is_leaf=lambda x: isinstance(x, P))
 
 

@@ -22,8 +22,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.core.grab import GrabConfig
 from repro.launch.mesh import data_axes
-from repro.launch.sharding import (ShardPolicy, cd_grab_state_specs,
-                                   state_specs, tree_specs, path_str)
+from repro.launch.sharding import (CD_GRAB_CANDIDATES, ShardPolicy,
+                                   cd_grab_slab_specs,
+                                   cd_grab_stacked_grad_specs,
+                                   cd_grab_state_specs, state_specs,
+                                   tree_specs, path_str)
 from repro.models import lm, whisper
 from repro.models.config import SHAPES_BY_NAME, ModelConfig
 from repro.optim import adamw, cosine
@@ -87,7 +90,8 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
               use_grab: bool = True, n_micro: Optional[int] = None,
               sketch_dim: int = 0, pad_heads: bool = False,
               quant8: bool = False, ordering: Optional[str] = None,
-              workers: Optional[int] = None):
+              workers: Optional[int] = None,
+              cd_constraints: Optional[str] = None, smoke: bool = False):
     """Build one (arch x shape) cell. ``ordering`` picks the data-ordering
     subsystem for train cells: "grab" (default, single-stream Algorithm 4),
     "cd-grab" (mesh-native CD-GraB: W workers sharded over the data axis,
@@ -96,9 +100,17 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
     "none" (plain accumulate — RR/SO baselines). ``use_grab=False`` is the
     legacy spelling of ordering="none". ``workers`` defaults to the mesh's
     data-axis size so each DP shard owns exactly one worker row.
+
+    ``cd_constraints`` names the explicit-constraint candidate applied
+    inside ``micro_workers`` for cd-grab cells (one of
+    ``launch.sharding.CD_GRAB_CANDIDATES``; default "none" = XLA
+    propagation). The dry-run compiles every candidate and keeps the one
+    with the fewest measured HLO collective bytes. ``smoke`` swaps in the
+    arch's SMOKE config (test/CI-scale cells on small CPU meshes).
     """
     policy = policy or ShardPolicy()
-    cfg, _ = get_config(arch)
+    full_cfg, smoke_cfg = get_config(arch)
+    cfg = smoke_cfg if smoke else full_cfg
     if pad_heads:
         # smallest per-group pad that makes padded heads divide the TP size
         tp = mesh.shape.get("model", 1)
@@ -135,16 +147,18 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
             dp_size = mesh.shape.get("data", 1)
             assert n_workers % dp_size == 0, \
                 f"W={n_workers} must shard over the data axis ({dp_size})"
-            k_dim = sketch_dim or CD_GRAB_SKETCH_DIM
+            # clamp to the parameter count: make_sketch allocates exactly
+            # min(k, total) coordinates, and the [k] running sum must match
+            k_dim = min(sketch_dim or CD_GRAB_SKETCH_DIM, n_params)
             if n_micro is None:
                 n_micro = 2 * n_workers      # T=2 pair timesteps per step
             assert n_micro % n_workers == 0, (n_micro, n_workers)
             grab_cfg = GrabConfig(pair_balance=True, sketch_dim=k_dim)
             sketch = make_sketch(params_abs, k_dim)
         elif ordering == "grab":
-            grab_cfg = GrabConfig(sketch_dim=sketch_dim)
+            grab_cfg = GrabConfig(sketch_dim=min(sketch_dim, n_params))
             if sketch_dim:
-                sketch = make_sketch(params_abs, sketch_dim)
+                sketch = make_sketch(params_abs, grab_cfg.sketch_dim)
         if n_micro is None:
             n_micro = N_MICRO
         loss = _loss_for(cfg)
@@ -159,20 +173,6 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
             return jax.tree.map(
                 lambda x, s: jax.lax.with_sharding_constraint(x, s),
                 tree, g_specs)
-
-        step_fn = build_train_step(loss, opt, cosine(3e-4, 10_000, 200),
-                                   grab_cfg, n_micro_per_epoch=1024,
-                                   sketch=sketch,
-                                   constrain_grads=constrain_grads,
-                                   n_workers=n_workers,
-                                   mesh=mesh if cd_grab else None)
-        state_abs = jax.eval_shape(
-            lambda: init_train_state(params_abs, opt, grab_cfg,
-                                     n_workers=n_workers))
-        # CD-GraB: the worker-stacked pair stash shards its leading [W] axis
-        # over 'data'; everything else keeps the plain state rules.
-        s_specs = (cd_grab_state_specs(state_abs, policy) if n_workers > 1
-                   else state_specs(state_abs, policy))
 
         if cfg.enc_dec:
             batch_abs = {
@@ -189,6 +189,45 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
         else:
             batch_abs = {"tokens": _sds((n_micro, mb, shape.seq_len), jnp.int32),
                          "labels": _sds((n_micro, mb, shape.seq_len), jnp.int32)}
+
+        cd_cons = None
+        if cd_grab:
+            cand = cd_constraints or "none"
+            assert cand in CD_GRAB_CANDIDATES, \
+                f"cd_constraints={cand!r}; known: {CD_GRAB_CANDIDATES}"
+            from repro.train.step import CdGrabConstraints
+
+            def pinner(spec_tree):
+                sh = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+                return lambda tree: jax.tree.map(
+                    jax.lax.with_sharding_constraint, tree, sh)
+
+            stacked = cd_grab_stacked_grad_specs(params_abs, policy)
+            cd_cons = CdGrabConstraints(
+                slab=(pinner(cd_grab_slab_specs(batch_abs))
+                      if cand != "none" else None),
+                grads=(pinner(stacked)
+                       if cand in ("slab_grads", "full") else None),
+                stash=pinner(stacked) if cand == "full" else None)
+        else:
+            cand = None
+
+        step_fn = build_train_step(loss, opt, cosine(3e-4, 10_000, 200),
+                                   grab_cfg, n_micro_per_epoch=1024,
+                                   sketch=sketch,
+                                   constrain_grads=constrain_grads,
+                                   n_workers=n_workers,
+                                   mesh=mesh if cd_grab else None,
+                                   cd_constraints=cd_cons)
+        state_abs = jax.eval_shape(
+            lambda: init_train_state(params_abs, opt, grab_cfg,
+                                     n_workers=n_workers))
+        # CD-GraB: the worker-stacked pair stash shards its leading [W] axis
+        # over 'data'; everything else keeps the plain state rules.
+        s_specs = (cd_grab_state_specs(state_abs, policy) if n_workers > 1
+                   else state_specs(state_abs, policy))
+
         mb_dp = _dp(mesh, mb)
         lead_dp = _dp(mesh, n_micro) if cd_grab else None
         if lead_dp is not None:
@@ -208,6 +247,7 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
                 "sketch_dim": grab_cfg.sketch_dim,
                 "pair_steps": n_micro // n_workers,
                 "group": mesh.shape.get("data", 1),
+                "constraints": cand,
             }
         return (step_fn, (state_abs, batch_abs), (s_specs, b_specs), (0,), meta)
 

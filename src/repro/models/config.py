@@ -110,4 +110,11 @@ SHAPES: Tuple[ShapeConfig, ...] = (
     ShapeConfig("long_500k", 524_288, 1, "decode"),
 )
 
-SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+# Test/CI-scale cells: addressable by name (the mesh tests and CI compile a
+# real cd-grab dry-run cell on forced multi-device CPU meshes) but kept out
+# of the SHAPES sweep that --all iterates.
+SMOKE_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_smoke", 128, 32, "train"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES + SMOKE_SHAPES}

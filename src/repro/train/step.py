@@ -22,7 +22,7 @@ microbatch's backward).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,13 +34,29 @@ from repro.train.state import TrainState
 from repro.utils.tree import tree_zeros_like
 
 
+class CdGrabConstraints(NamedTuple):
+    """Explicit sharding constraints for the [W, ...]-leading intermediates
+    inside ``micro_workers`` (the CD-GraB scan body). Each field is an
+    optional tree->tree callable (with_sharding_constraint under the hood);
+    None leaves that intermediate to XLA's propagation. The launcher builds
+    these from ``launch.sharding`` (``cd_grab_slab_specs`` /
+    ``cd_grab_stacked_grad_specs``) so the constraint set and the
+    ``cd_grab_state_specs`` in_shardings come from one source of truth, and
+    the dry-run hillclimbs over ``launch.sharding.CD_GRAB_CANDIDATES`` to
+    pick the measured-best set."""
+    slab: Optional[Callable] = None     # [W, micro, ...] per-timestep batch
+    grads: Optional[Callable] = None    # vmapped per-worker grads [W, ...]
+    stash: Optional[Callable] = None    # worker-stacked pair stash [W, ...]
+
+
 def build_train_step(loss_fn: Callable, optimizer: Optimizer,
                      lr_schedule: Callable,
                      grab_cfg: Optional[GrabConfig] = None,
                      n_micro_per_epoch: int = 1,
                      sketch: Optional[Sketch] = None,
                      constrain_grads: Optional[Callable] = None,
-                     n_workers: int = 1, mesh=None, data_axis: str = "data"):
+                     n_workers: int = 1, mesh=None, data_axis: str = "data",
+                     cd_constraints: Optional[CdGrabConstraints] = None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     loss_fn(params, micro_batch) -> (loss, metrics_dict).
@@ -73,8 +89,16 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
     worker-stacked stash of the CD-GraB path is pinned by the launcher via
     ``launch.sharding.cd_grab_state_specs`` instead — its leading axis is
     not gradient-shaped.)
+
+    ``cd_constraints``: optional :class:`CdGrabConstraints` applying
+    explicit in-scan constraints to the CD-GraB intermediates (batch slab /
+    per-worker grads / stash). Without them XLA picks the stash-vs-gradient
+    resharding itself, which the dry-run observed as unattributed extra
+    all-gather bytes; the launcher hillclimbs over candidate sets and passes
+    the measured-best one.
     """
     pin = constrain_grads or (lambda t: t)
+    cdc = cd_constraints or CdGrabConstraints()
     if n_workers > 1:
         assert grab_cfg is not None and grab_cfg.pair_balance, \
             "multi-worker ordering is the CD-GraB pair-balance mode"
@@ -84,6 +108,9 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
             return gs
         s = gs.s if grab_cfg.sketch_dim > 0 else pin(gs.s)
         if n_workers > 1:          # stash carries a worker axis; see above
+            if cdc.stash is not None:
+                return gs._replace(s=s, m_prev=cdc.stash(gs.m_prev),
+                                   m_acc=cdc.stash(gs.m_acc))
             return gs._replace(s=s)
         return gs._replace(s=s, m_prev=pin(gs.m_prev), m_acc=pin(gs.m_acc))
 
@@ -108,8 +135,12 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
         def micro_workers(carry, mb_w):
             # mb_w: [W, micro, ...] — one timestep of W per-worker batches
             acc, grab_state = carry
+            if cdc.slab is not None:
+                mb_w = cdc.slab(mb_w)
             (losses, metrics), grads = jax.vmap(
                 grad_fn, in_axes=(None, 0))(params, mb_w)
+            if cdc.grads is not None:
+                grads = cdc.grads(grads)
             grab_state, eps = grab_step_workers(grab_state, grads,
                                                 grab_cfg, sketch,
                                                 mesh=mesh, data_axis=data_axis)

@@ -9,7 +9,8 @@ still execute every property test.
 
 Scope is deliberately tiny: keyword-argument ``@given``, ``@settings`` with
 ``max_examples``/``deadline``, and the strategies this repo uses
-(``integers``, ``sampled_from``, ``floats``, ``booleans``, ``lists``).
+(``integers``, ``sampled_from``, ``floats``, ``booleans``, ``lists``,
+``tuples``).
 Examples come from a fixed-seed generator derived from the test's qualified
 name, so failures reproduce run-to-run; there is no shrinking — the raised
 AssertionError carries the falsifying draw instead.
@@ -78,12 +79,17 @@ def _lists(elems: _Strategy, min_size=0, max_size=10, **_kw):
     return _Strategy(draw)
 
 
+def _tuples(*elems):
+    return _Strategy(lambda rng: tuple(e._draw(rng) for e in elems))
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.sampled_from = _sampled_from
 strategies.floats = _floats
 strategies.booleans = _booleans
 strategies.lists = _lists
+strategies.tuples = _tuples
 
 
 def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):

@@ -24,6 +24,12 @@ ALWEISS_KEY = 7
 STEP_DIM = 16   # full-gradient dim for the grab_step_workers check
 STEP_SKETCH = 8
 STEP_T = 4      # timesteps (2 pair steps)
+# cd-grab dry-run cell (SMOKE config on this worker's real n_dev x 1 mesh):
+# the sharding hillclimb + the analytic-vs-HLO sign-collective cross-check.
+DRYRUN_ARCH = "minicpm-2b"
+DRYRUN_SHAPE = "train_smoke"
+DRYRUN_SKETCH = 96   # no SMOKE param slab is [W, 96]-shaped -> unambiguous
+#                      fingerprint for the [W, k] sign all-gather isolation
 
 
 def _inputs():
@@ -113,6 +119,24 @@ def main(n_dev: int) -> dict:
     ok = ok and bool(np.array_equal(np.asarray(st_m.s), np.asarray(st_h.s)))
     out["step_bitmatch"] = ok
     out["step_signs"] = step_eps
+
+    # --- cd-grab dry-run cell: constraint hillclimb + analytic-vs-HLO ----
+    # Imported only now: jax is already initialized, so the module-level
+    # forced-device-count flag append in launch.dryrun is inert.
+    from jax.sharding import Mesh
+    from repro.launch.dryrun import run_cell
+
+    cell_mesh = Mesh(np.asarray(jax.devices()).reshape(n_dev, 1),
+                     ("data", "model"))
+    rec = run_cell(DRYRUN_ARCH, DRYRUN_SHAPE, cell_mesh, ordering="cd-grab",
+                   sketch_dim=DRYRUN_SKETCH, smoke=True, verbose=False)
+    out["dryrun"] = {k: rec.get(k) for k in (
+        "status", "reason",
+        "sign_collective_bytes_per_dev", "sign_collective_count",
+        "sign_collective_s",
+        "sign_collective_bytes_per_dev_hlo", "sign_collective_count_hlo",
+        "sign_collective_s_hlo", "sign_collective_delta")}
+    out["dryrun"]["cd_grab"] = rec.get("cd_grab")
     return out
 
 

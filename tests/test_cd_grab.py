@@ -279,6 +279,34 @@ def test_cd_grab_trains_end_to_end():
     assert hist[-1]["loss"] < 0.5 * hist[0]["loss"]
 
 
+def test_coord_impl_env_validation(monkeypatch):
+    """Unknown REPRO_COORD_IMPL values (e.g. the typo 'palas') used to fall
+    silently through to the XLA scan; they must raise with the allowed set."""
+    from repro.core.distributed import _coord_impl
+
+    monkeypatch.setenv("REPRO_COORD_IMPL", "palas")
+    with pytest.raises(ValueError, match=r"palas.*pallas.*xla"):
+        _coord_impl()
+    rng = np.random.default_rng(21)
+    zs = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    s0 = jnp.zeros(8, jnp.float32)
+    with pytest.raises(ValueError, match="pallas"):
+        coordinated_pair_signs(s0, zs)           # resolves via the env var
+    for ok in ("pallas", "xla"):
+        monkeypatch.setenv("REPRO_COORD_IMPL", ok)
+        assert _coord_impl() == ok
+    monkeypatch.delenv("REPRO_COORD_IMPL")
+    assert _coord_impl() in ("pallas", "xla")
+
+
+def test_coordinated_pair_signs_rejects_unknown_impl():
+    rng = np.random.default_rng(22)
+    zs = jnp.asarray(rng.normal(size=(2, 8)), jnp.float32)
+    s0 = jnp.zeros(8, jnp.float32)
+    with pytest.raises(ValueError, match=r"impl='cuda'.*pallas.*xla"):
+        coordinated_pair_signs(s0, zs, impl="cuda")
+
+
 def test_make_policy_cd_grab_spellings_and_errors():
     for name in ("cd-grab", "cd_grab", "cdgrab"):
         p = make_policy(name, 16, workers=4)

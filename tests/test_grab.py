@@ -85,3 +85,67 @@ def test_alweiss_grab_runs():
     g = _tree(np.random.default_rng(2).normal(size=16).astype(np.float32))
     st, eps = grab_step(st, g, 4, cfg)
     assert int(eps) in (-1, 1)
+
+
+# ---------------------------------------------------------------------------
+# make_sketch allocation invariant (regression: the old largest-leaves
+# round-robin could crash on 0-d leaves and under-allocate vs min(k, total))
+# ---------------------------------------------------------------------------
+
+def test_make_sketch_tiny_leaf_allocation_property():
+    from hypothesis import given, settings, strategies as st
+
+    shape_st = st.lists(
+        st.tuples(st.integers(0, 2),            # rank (0 = scalar leaf)
+                  st.integers(1, 6), st.integers(1, 6)),
+        min_size=1, max_size=8)
+
+    @settings(max_examples=60, deadline=None)
+    @given(raw=shape_st, k=st.integers(1, 200), seed=st.integers(0, 2**16))
+    def check(raw, k, seed):
+        shapes = [tuple(dims[:rank]) for rank, *dims in raw]
+        tree = {f"l{i}": jnp.zeros(s, jnp.float32)
+                for i, s in enumerate(shapes)}
+        total = sum(int(np.prod(s)) for s in shapes)
+        sk = make_sketch(tree, k, seed=seed)
+        assert sk.dim == min(k, total), (shapes, k)
+        z = sk.apply(tree)
+        assert z.shape == (min(k, total),)       # matches the [k] running sum
+        assert z.dtype == jnp.float32
+
+    check()
+
+
+def test_make_sketch_scalar_leaves_sampled():
+    """0-d leaves used to crash np.unravel_index; they are one coordinate."""
+    tree = {"a": jnp.float32(3.0), "b": jnp.ones((2, 2), jnp.float32)}
+    sk = make_sketch(tree, 5)
+    assert sk.dim == 5
+    z = np.asarray(sk.apply(tree))
+    assert z.shape == (5,)
+    assert 3.0 in z                              # the scalar's coordinate
+
+
+def test_make_sketch_full_leaf_plus_remainder():
+    """Remainder redistribution must target leaves with headroom: with one
+    dominant leaf near saturation the spare slots go to the small leaves."""
+    tree = {"big": jnp.zeros((8,), jnp.float32),
+            "s1": jnp.zeros((1,), jnp.float32),
+            "s2": jnp.zeros((1,), jnp.float32),
+            "s3": jnp.zeros((1,), jnp.float32)}
+    sk = make_sketch(tree, 11)                   # == total: every coordinate
+    assert sk.dim == 11
+    assert sk.apply(tree).shape == (11,)
+
+
+# ---------------------------------------------------------------------------
+# expand_pair_signs: odd-length streams fail loud (regression: bare assert)
+# ---------------------------------------------------------------------------
+
+def test_expand_pair_signs_odd_length_raises_actionable():
+    from repro.core.grab import expand_pair_signs
+
+    with pytest.raises(ValueError, match=r"even-length.*got 5"):
+        expand_pair_signs(np.array([0, 1, 0, -1, 0]))
+    with pytest.raises(ValueError, match="pair"):
+        expand_pair_signs(np.array([[0, 0], [1, -1], [0, 0]]))  # odd T, 2D

@@ -188,3 +188,91 @@ def test_gla_ref_final_state_consistency():
         S = S.at[0, 0].set(w[0, 0, t][:, None] * S[0, 0] + kv)
     np.testing.assert_allclose(np.asarray(S), np.asarray(S_full),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# coord_balance chunked-k path + VMEM-budget guard (k > 64K stays correct)
+# ---------------------------------------------------------------------------
+
+def test_select_coord_impl_vmem_guard():
+    """The dispatcher picks by estimated VMEM footprint: plain full-k tiles
+    while they fit, the chunked-k kernel past the budget, and the pure-jnp
+    oracle when even the chunked running sum would not fit."""
+    from repro.kernels.ops import select_coord_impl
+    from repro.kernels.coord_balance import CHUNK_K
+
+    assert select_coord_impl(8, 1024) == ("plain", None)
+    impl, ck = select_coord_impl(8, 100_000)       # ROADMAP's k > 64K case
+    assert impl == "chunked" and ck == CHUNK_K
+    assert select_coord_impl(8, 100_000, vmem_budget=1024) == ("ref", None)
+    # an explicit chunk_k forces the chunked path even at small k
+    impl, ck = select_coord_impl(4, 256, chunk_k=128)
+    assert impl == "chunked" and ck == 128
+
+
+@pytest.mark.parametrize("w,k,ck", [
+    (3, 129, 128),      # k just above the chunk boundary (pads to 2 chunks)
+    (1, 130, 128),      # single row still needs the ghost flush pass
+    (5, 384, 128),      # k an exact chunk multiple
+    (8, 900, 256),      # W a TILE_W multiple, ragged final chunk
+])
+def test_coord_balance_chunked_matches_ref(w, k, ck):
+    rng = np.random.default_rng(w * 1000 + k)
+    zp = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    zc = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    signs_k, s_k = coord_balance(s0, zp, zc, interpret=True, chunk_k=ck)
+    signs_r, s_r = coord_balance_ref(s0, zp, zc)
+    np.testing.assert_array_equal(np.asarray(signs_k), np.asarray(signs_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_coord_balance_chunked_equals_plain_kernel():
+    """Same inputs through both kernel variants: the signs must agree and
+    the sums match to reduction-reorder tolerance."""
+    rng = np.random.default_rng(77)
+    w, k = 6, 512
+    zp = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    zc = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    signs_p, s_p = coord_balance(s0, zp, zc, interpret=True)
+    signs_c, s_c = coord_balance(s0, zp, zc, interpret=True, chunk_k=128)
+    np.testing.assert_array_equal(np.asarray(signs_p), np.asarray(signs_c))
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_c),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.slow
+def test_coord_balance_past_64k_via_guard():
+    """k > 64K end-to-end through the default guard (no forced chunk_k):
+    the chunked kernel is selected and stays correct."""
+    from repro.kernels.ops import select_coord_impl
+
+    w, k = 4, 66_000
+    assert select_coord_impl(w, k)[0] == "chunked"
+    rng = np.random.default_rng(13)
+    zp = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    zc = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    signs_k, s_k = coord_balance(s0, zp, zc, interpret=True)
+    signs_r, s_r = coord_balance_ref(s0, zp, zc)
+    np.testing.assert_array_equal(np.asarray(signs_k), np.asarray(signs_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_coord_balance_ref_fallback_past_budget():
+    """Past even the chunked budget the wrapper falls back to the oracle —
+    correct at any k, same int32 sign contract."""
+    rng = np.random.default_rng(14)
+    w, k = 3, 1024
+    zp = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    zc = jnp.asarray(rng.normal(size=(w, k)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    signs_k, s_k = coord_balance(s0, zp, zc, vmem_budget=512)
+    assert signs_k.dtype == jnp.int32
+    signs_r, s_r = coord_balance_ref(s0, zp, zc)
+    np.testing.assert_array_equal(np.asarray(signs_k), np.asarray(signs_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)

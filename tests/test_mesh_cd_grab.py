@@ -112,3 +112,45 @@ def test_grab_step_workers_signs_agree_across_device_counts():
     arr = np.asarray(base)
     assert np.array_equal(arr[0::2], np.zeros_like(arr[0::2]))
     assert set(np.unique(arr[1::2])) <= {-1, 1}
+
+
+# ---------------------------------------------------------------------------
+# cd-grab dry-run cell on the real mesh: the sign-collective roofline terms
+# must be *measured*, not just asserted — the HLO-isolated [W, k] all-gather
+# bytes agree with the analytic model, and the micro_workers constraint set
+# the hillclimb picked is the measured-best candidate.
+# ---------------------------------------------------------------------------
+
+# the same threshold run_cell enforces (roofline has no jax import side
+# effects, unlike launch.dryrun which forces the host device count)
+from repro.launch.roofline import SIGN_TOL  # noqa: E402
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+def test_dryrun_sign_collectives_analytic_vs_hlo(n_dev):
+    dr = worker(n_dev)["dryrun"]
+    assert dr["status"] == "ok", dr
+    a = dr["sign_collective_bytes_per_dev"]
+    h = dr["sign_collective_bytes_per_dev_hlo"]
+    assert h > 0, "no [W, k] all-gather isolated from the compiled HLO"
+    assert abs(a - h) / max(a, h) <= SIGN_TOL, (a, h)
+    assert dr["sign_collective_delta"] <= SIGN_TOL, dr
+    assert dr["sign_collective_s_hlo"] > 0
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+def test_dryrun_constraint_winner_is_measured_best(n_dev):
+    from repro.launch.sharding import CD_GRAB_CANDIDATES
+
+    cg = worker(n_dev)["dryrun"]["cd_grab"]
+    cands = cg["candidates"]
+    assert [c["constraints"] for c in cands] == list(CD_GRAB_CANDIDATES)
+    # every candidate reports its measured extra (stash-resharding)
+    # all-gather bytes next to the isolated sign bytes
+    for c in cands:
+        assert c["extra_allgather_bytes_per_dev"] == pytest.approx(
+            c["allgather_bytes_per_dev"]
+            - c["sign_allgather_bytes_per_dev_hlo"])
+    best = min(c["collective_bytes_per_dev"] for c in cands)
+    chosen = next(c for c in cands if c["constraints"] == cg["constraints"])
+    assert chosen["collective_bytes_per_dev"] == best, cands
