@@ -25,6 +25,12 @@ Two measurements, both CPU-friendly:
    multi-device CPU mesh; the W rows shard over it, so only W that are
    multiples of N run — others are emitted as ``wallclock_skipped``).
 
+4. **Live-loop dispatch wall-clock** (``--wallclock-loop``): whole epochs of
+   the real training loop on the mesh path, legacy host-synchronous dispatch
+   (``LoopConfig.sync_transfers=True``: one loss + sign fetch per step) vs
+   the async loop (device-resident sign buffer, ≤1 fetch per epoch) — the
+   per-epoch win of ISSUE 5's dispatch-asynchronous refactor.
+
 CSV rows: kind,W,epoch,value. Every run also emits ``BENCH_cd_grab.json``
 (``--json`` to relocate) with the same rows plus run metadata, so the perf
 trajectory is recorded per commit.
@@ -142,6 +148,75 @@ def run_wallclock(workers: tuple, d: int = 65_536, k: int = 256,
     return rows
 
 
+def run_loop_wallclock(epochs: int, n: int = 512, d: int = 64,
+                       micro: int = 2, k: int = 64, seed: int = 0):
+    """Per-epoch wall-clock of the *live* training loop, host-synchronous
+    vs dispatch-asynchronous, on this process's real device mesh.
+
+    Both runs take the identical launcher path (``LoopConfig.mesh``: jitted
+    step with explicit in_shardings, donated state, hillclimb-default
+    cd-grab constraints, W = device count workers); the only difference is
+    ``sync_transfers`` — the legacy loop blocks on a loss + sign fetch
+    every step, the async loop keeps signs in the device-resident buffer
+    and fetches once per epoch. Rows:
+
+    ``wallclock_loop_sync_s``  — median steady-state epoch, legacy dispatch;
+    ``wallclock_loop_async_s`` — same, async dispatch (≤1 sign fetch/epoch);
+    ``wallclock_loop_speedup`` — sync / async.
+
+    The two modes run in *interleaved rounds* (sync, async, sync, async, …)
+    and the medians pool the steady-state epochs of every round — on a
+    shared CI box, load drift between two monolithic runs otherwise swamps
+    the dispatch delta. Each round's epoch 0 (compile) is dropped; run with
+    epochs >= 3 for a stable median. Force a multi-device mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    from benchmarks.common import ClsDataset
+    from repro.data.synthetic import synthetic_classification
+    from repro.launch.mesh import make_elastic_mesh
+    from repro.models.paper_models import logreg_init, logreg_loss
+    from repro.optim import constant, sgdm
+    from repro.train import LoopConfig, run_training
+
+    n_dev = jax.device_count()
+    mesh = make_elastic_mesh(model_parallel=1)
+    w = n_dev
+    n_micro_total = n // micro
+    n_micro = max(8, w)
+    assert n_micro_total % n_micro == 0 and n_micro % w == 0, \
+        (n_micro_total, n_micro, w)
+    x, y = synthetic_classification(n, d, seed=1, noise=2.0)
+    ds = ClsDataset(x, y)
+    loss_fn = lambda p, mb: (logreg_loss(p, mb), {})
+
+    rows = [("wallclock_loop_devices", 0, 0, float(n_dev))]
+    samples = {True: [], False: []}
+    for _round in range(3):
+        for sync in (True, False):
+            params = logreg_init(jax.random.PRNGKey(seed), d, 10)
+            marks = [time.perf_counter()]
+
+            def hook(epoch, state, history):
+                marks.append(time.perf_counter())
+
+            cfg = LoopConfig(epochs=epochs, n_micro=n_micro,
+                             ordering="cd-grab", workers=w, log_every=0,
+                             seed=seed, mesh=mesh, sync_transfers=sync)
+            run_training(loss_fn, params, sgdm(0.9), constant(0.05), ds,
+                         micro, cfg,
+                         grab_cfg=GrabConfig(pair_balance=True,
+                                             sketch_dim=k),
+                         hooks=hook)
+            per_epoch = np.diff(marks)
+            steady = per_epoch[1:] if len(per_epoch) > 1 else per_epoch
+            samples[sync].extend(float(t) for t in steady)
+    med = {s: float(np.median(v)) for s, v in samples.items()}
+    rows += [("wallclock_loop_sync_s", w, 0, med[True]),
+             ("wallclock_loop_async_s", w, 0, med[False]),
+             ("wallclock_loop_speedup", w, 0, med[True] / med[False])]
+    return rows
+
+
 def run_train(epochs: int, workers: tuple, seed: int):
     from benchmarks.common import ClsDataset
     from repro.data.synthetic import synthetic_classification
@@ -185,6 +260,13 @@ def main(argv=None):
                     help="also time the sign dataflow vs the device step")
     ap.add_argument("--wallclock-d", type=int, default=65_536,
                     help="synthetic gradient dim for --wallclock")
+    ap.add_argument("--wallclock-loop", action="store_true",
+                    help="also time whole live-loop epochs: legacy "
+                         "host-synchronous dispatch vs the async loop "
+                         "(W = device count, mesh path, see run_loop_wallclock)")
+    ap.add_argument("--loop-epochs", type=int, default=4,
+                    help="epochs for --wallclock-loop (first is dropped "
+                         "as compile)")
     ap.add_argument("--json", default="BENCH_cd_grab.json",
                     help="where to write the JSON record ('' disables)")
     args = ap.parse_args(argv)
@@ -196,6 +278,8 @@ def main(argv=None):
     if args.wallclock:
         rows += run_wallclock(tuple(args.workers), d=args.wallclock_d,
                               seed=args.seed)
+    if args.wallclock_loop:
+        rows += run_loop_wallclock(args.loop_epochs, seed=args.seed)
 
     print("kind,W,epoch,value")
     for kind, w, epoch, v in rows:
@@ -208,6 +292,7 @@ def main(argv=None):
             "config": {"n": args.n, "d": args.d, "epochs": args.epochs,
                        "workers": list(args.workers), "seed": args.seed,
                        "wallclock_d": args.wallclock_d,
+                       "loop_epochs": args.loop_epochs,
                        "devices": jax.device_count()},
             "rows": [list(r) for r in rows],
         }

@@ -71,19 +71,26 @@ def run_one(ordering: str, epochs: int = 20, n: int = 512, d: int = 32,
         for epoch in range(epochs):
             sigma = policy.epoch_order(epoch)
             stored = []
+            losses = []            # device scalars; one batched fetch/epoch
             acc = None
             for s in range(n_micro):
                 m = sigma[s]
                 mb = ds.batch(np.arange(m * micro, (m + 1) * micro))
                 loss, g = grad_fn(params, mb)
-                stored.append(np.concatenate(
-                    [np.asarray(g["w"]).ravel(), np.asarray(g["b"]).ravel()]))
+                stored.append(g)
+                losses.append(loss)
                 acc = g if acc is None else jax.tree.map(jnp.add, acc, g)
                 if (s + 1) % accum == 0:
                     acc = jax.tree.map(lambda x: x / accum, acc)
                     state, params = opt.update(state, acc, params, lr)
                     acc = None
-                hist.append({"epoch": epoch, "loss": float(loss)})
+            # greedy needs the whole epoch's gradients anyway, so fetch them
+            # (and the losses) in one transfer at the boundary instead of
+            # blocking dispatch on np.asarray every microbatch
+            stored, losses = jax.device_get((stored, losses))
+            stored = [np.concatenate([g["w"].ravel(), g["b"].ravel()])
+                      for g in stored]
+            hist.extend({"epoch": epoch, "loss": float(l)} for l in losses)
             # stored[s] is microbatch sigma[s]'s gradient; reindex to
             # dataset order before re-herding
             stored = np.stack(stored)

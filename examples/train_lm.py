@@ -39,7 +39,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", choices=PRESETS, default="cpu-smoke")
     ap.add_argument("--ordering", default="grab",
-                    choices=["grab", "rr", "so", "flipflop"])
+                    choices=["grab", "cd-grab", "rr", "so", "flipflop"])
+    ap.add_argument("--workers", type=int, default=1,
+                    help="cd-grab: W logical data-parallel workers")
+    ap.add_argument("--mesh", action="store_true",
+                    help="run the launcher path: an elastic data-parallel "
+                         "mesh over all local devices (force several CPU "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N), "
+                         "explicit in_shardings + the hillclimb-winning "
+                         "cd-grab constraint set, donated device state")
+    ap.add_argument("--sketch-dim", type=int, default=0,
+                    help="GraB sketch width k (0 = full-pytree balance; "
+                         "cd-grab on a mesh uses k for the sign all-gather)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--epochs", type=int, default=None)
     args = ap.parse_args()
@@ -49,20 +61,28 @@ def main():
     ds = SyntheticTextDataset(p["n_examples"], p["seq_len"], cfg.vocab, seed=0)
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_elastic_mesh
+        mesh = make_elastic_mesh(model_parallel=1)
     print(f"model {cfg.name}: {n_params / 1e6:.1f}M params, "
           f"{len(ds)} examples of {p['seq_len']} tokens, "
-          f"ordering={args.ordering}")
+          f"ordering={args.ordering}"
+          + (f", mesh={dict(mesh.shape)}" if mesh is not None else ""))
 
     loss_fn = lambda prm, mb: lm.loss_fn(prm, cfg, mb, remat=True)
     steps_per_epoch = len(ds) // (p["micro"] * p["n_micro"])
     total = (args.epochs or p["epochs"]) * steps_per_epoch
     loop = LoopConfig(epochs=args.epochs or p["epochs"], n_micro=p["n_micro"],
-                      ordering=args.ordering, ckpt_dir=args.ckpt_dir,
-                      log_every=10)
+                      ordering=args.ordering, workers=args.workers,
+                      ckpt_dir=args.ckpt_dir, log_every=10, mesh=mesh)
+    grab_cfg = None
+    if args.ordering in ("grab", "cd-grab"):
+        grab_cfg = GrabConfig(pair_balance=args.ordering == "cd-grab",
+                              sketch_dim=min(args.sketch_dim, n_params))
     state, hist = run_training(loss_fn, params, adamw(),
                                cosine(p["lr"], total, warmup=total // 20),
-                               ds, p["micro"], loop,
-                               grab_cfg=GrabConfig())
+                               ds, p["micro"], loop, grab_cfg=grab_cfg)
     per_epoch = {}
     for h in hist:
         per_epoch.setdefault(h["epoch"], []).append(h["loss"])

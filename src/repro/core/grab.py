@@ -18,10 +18,15 @@ sequential-scan bandwidth from O(d) to O(k). The Pallas kernel in
 
 Host side
 ---------
-The permutation itself lives on the host: :class:`EpochOrder` (in
-``repro.core.orderings``) collects the per-step signs and applies the
-Algorithm-3 two-pointer reorder at epoch end. Separating the two keeps the
-device step purely functional (checkpointable, reshardable).
+The permutation itself lives on the host: the ordering policies in
+``repro.core.orderings`` consume the epoch's signs and apply the Algorithm-3
+two-pointer reorder at the boundary. Separating the two keeps the device step
+purely functional (checkpointable, reshardable). The signs themselves stay
+*device-resident* mid-epoch: :func:`init_sign_buffer` allocates the int8
+``[T, W]`` per-epoch buffer carried in ``TrainState.signs``, the train step
+appends to it at the GraB clock ``t``, and the host fetches it exactly once
+per epoch (``orderings.OrderPolicy.apply_epoch_signs``) — no per-step
+device→host sync on the dispatch path.
 """
 from __future__ import annotations
 
@@ -143,12 +148,15 @@ def make_sketch(tree, k: int, seed: int = 0) -> Sketch:
 # ---------------------------------------------------------------------------
 
 def init_grab_state(grad_template, cfg: GrabConfig) -> GrabState:
-    zeros = tree_zeros_like(grad_template, jnp.float32)
+    # distinct zero trees per field: the live loop donates the whole
+    # TrainState into the jitted step, and donating the *same* buffer twice
+    # (an aliased s/m_prev/m_acc) is an XLA execute error
     if cfg.sketch_dim > 0:
         s = jnp.zeros((cfg.sketch_dim,), jnp.float32)
     else:
-        s = zeros
-    return GrabState(s=s, m_prev=zeros, m_acc=zeros,
+        s = tree_zeros_like(grad_template, jnp.float32)
+    return GrabState(s=s, m_prev=tree_zeros_like(grad_template, jnp.float32),
+                     m_acc=tree_zeros_like(grad_template, jnp.float32),
                      t=jnp.int32(0), key=jax.random.PRNGKey(cfg.seed))
 
 
@@ -237,16 +245,32 @@ def init_parallel_grab_state(grad_template, cfg: GrabConfig,
     ``launch.sharding.cd_grab_state_specs``)."""
     assert cfg.pair_balance, "parallel GraB is the CD-GraB pair-balance mode"
     assert n_workers >= 1
-    zeros = tree_zeros_like(grad_template, jnp.float32)
-    stash = jax.tree.map(
-        lambda z: jnp.zeros((n_workers,) + z.shape, jnp.float32),
-        grad_template)
+
+    def stash():   # distinct per field: donated states must not alias
+        return jax.tree.map(
+            lambda z: jnp.zeros((n_workers,) + z.shape, jnp.float32),
+            grad_template)
+
     if cfg.sketch_dim > 0:
         s = jnp.zeros((cfg.sketch_dim,), jnp.float32)
     else:
-        s = zeros
-    return GrabState(s=s, m_prev=stash, m_acc=stash,
+        s = tree_zeros_like(grad_template, jnp.float32)
+    return GrabState(s=s, m_prev=stash(), m_acc=stash(),
                      t=jnp.int32(0), key=jax.random.PRNGKey(cfg.seed))
+
+
+def init_sign_buffer(n_micro_per_epoch: int, n_workers: int = 1) -> jax.Array:
+    """The device-resident per-epoch sign buffer: int8 ``[T, W]`` with
+    ``T = n_micro_per_epoch / n_workers`` per-worker timesteps.
+
+    Row ``t`` holds the W signs the balancer emitted at timestep ``t`` (zeros
+    on pair-stash steps, exactly as the policies' expanders expect). The
+    train step writes rows at offset ``grab.t`` via ``dynamic_update_slice``,
+    so the buffer is epoch-positional: replaying or resuming an epoch
+    overwrites the same rows it would have produced, and a mid-epoch
+    checkpoint restores a prefix that the remaining steps complete."""
+    assert n_micro_per_epoch % n_workers == 0, (n_micro_per_epoch, n_workers)
+    return jnp.zeros((n_micro_per_epoch // n_workers, n_workers), jnp.int8)
 
 
 def grab_step_workers(state: GrabState, grads, cfg: GrabConfig,

@@ -26,10 +26,22 @@ class OrderPolicy:
         raise NotImplementedError
 
     # GraB hook points (no-ops for static policies).
-    # record_step_signs buffers raw per-step device signs mid-epoch (so a
-    # mid-epoch checkpoint captures them); end_epoch consumes the buffer and
-    # commits the Alg.3 reorder; record_signs applies a full epoch's expanded
-    # signs in one shot (tests / offline drivers).
+    # apply_epoch_signs is the live loop's entry: one call per epoch with the
+    # full raw [T, W] device sign buffer (TrainState.signs), fetched once —
+    # mid-epoch the pending signs live on the device, not here.
+    # record_step_signs buffers raw per-step signs for incremental drivers
+    # (benchmark harnesses, offline sweeps); end_epoch consumes the buffer
+    # and commits the Alg.3 reorder; record_signs applies a full epoch's
+    # expanded signs in one shot (tests / offline drivers).
+    def apply_epoch_signs(self, epoch: int, raw_signs: np.ndarray) -> None:
+        """Consume one epoch's raw (unexpanded) sign buffer and commit the
+        epoch-boundary reorder. Equivalent to ``record_step_signs(raw)``
+        followed by ``end_epoch(epoch)``; any previously buffered partial
+        records are superseded (the buffer is the epoch's source of truth)."""
+        self.discard_pending()
+        self.record_step_signs(raw_signs)
+        self.end_epoch(epoch)
+
     def record_step_signs(self, signs: np.ndarray) -> None:
         pass
 

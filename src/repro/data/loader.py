@@ -52,21 +52,49 @@ class PermutedLoader:
         return self.ds.batch(local)
 
     def epoch(self, epoch: int, start_step: int = 0):
-        """Iterate (step, microbatch) with background prefetch."""
+        """Iterate (step, microbatch) with background prefetch.
+
+        The producer thread is failure- and abandonment-safe:
+
+        * a ``load_micro`` exception is re-raised *in the consumer* (a bare
+          ``finally: q.put(stop)`` would turn it into a silently truncated
+          epoch — the loop would commit an epoch-boundary reorder on a
+          partial sign stream);
+        * every ``q.put`` is bounded by a shutdown flag, so a consumer that
+          abandons the generator mid-epoch (early break, its own exception)
+          unblocks the producer instead of deadlocking it on a full queue.
+        """
         q: queue.Queue = queue.Queue(maxsize=self.prefetch)
         stop = object()
+        shutdown = threading.Event()
+
+        def bounded_put(item) -> bool:
+            while not shutdown.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def producer():
             try:
                 for s in range(start_step, self.n_micro):
-                    q.put((s, self.load_micro(epoch, s)))
-            finally:
-                q.put(stop)
+                    if not bounded_put((s, self.load_micro(epoch, s))):
+                        return                     # consumer went away
+                bounded_put(stop)
+            except BaseException as e:  # noqa: BLE001 — hand to the consumer
+                bounded_put((stop, e))
 
         t = threading.Thread(target=producer, daemon=True)
         t.start()
-        while True:
-            item = q.get()
-            if item is stop:
-                break
-            yield item
+        try:
+            while True:
+                item = q.get()
+                if item is stop:
+                    break
+                if isinstance(item, tuple) and item[0] is stop:
+                    raise item[1]
+                yield item
+        finally:
+            shutdown.set()

@@ -34,7 +34,8 @@ from repro.launch.roofline import (SIGN_TOL, analyze_hlo, model_flops,
                                    roofline_terms, sign_collective_delta,
                                    sign_collective_hlo_terms,
                                    sign_collective_terms)
-from repro.launch.sharding import CD_GRAB_CANDIDATES, ShardPolicy
+from repro.launch.sharding import (CD_GRAB_CANDIDATES,
+                                   CD_GRAB_DEFAULT_CONSTRAINT, ShardPolicy)
 from repro.launch.specs import make_cell
 from repro.models.config import SHAPES, SHAPES_BY_NAME
 
@@ -207,6 +208,18 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
             rec["cd_grab"] = cg
             if candidates is not None:
                 cg["candidates"] = candidates
+                # the live loop (train.loop.LoopConfig.mesh -> launch.live)
+                # applies CD_GRAB_DEFAULT_CONSTRAINT without sweeping; flag
+                # drift so a changed winner gets folded back into the default
+                cg["live_default_constraint"] = CD_GRAB_DEFAULT_CONSTRAINT
+                cg["live_default_is_measured_best"] = (
+                    cg["constraints"] == CD_GRAB_DEFAULT_CONSTRAINT)
+                if not cg["live_default_is_measured_best"] and verbose:
+                    print(f"[dryrun] note: measured-best constraint set "
+                          f"{cg['constraints']!r} != live-loop default "
+                          f"{CD_GRAB_DEFAULT_CONSTRAINT!r} "
+                          f"(launch.sharding.CD_GRAB_DEFAULT_CONSTRAINT) — "
+                          f"update it if this holds on the production mesh")
             rec.update(sign_collective_terms(
                 n_workers=cg["n_workers"], sketch_dim=cg["sketch_dim"],
                 pair_steps=cg["pair_steps"], group=cg["group"]))

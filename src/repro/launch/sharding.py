@@ -160,6 +160,64 @@ def _stack_worker_spec(spec: P, data_axis: str) -> P:
 # collective bytes (see ``launch.dryrun.run_cell``).
 CD_GRAB_CANDIDATES = ("none", "slab", "slab_grads", "full")
 
+# The measured hillclimb winner (EXPERIMENTS.md §micro_workers sharding
+# hillclimb): the explicit slab constraint removes the stash-resharding
+# all-gathers XLA's propagation otherwise inserts (~106 KB/dev on the smoke
+# cells), and the stronger sets are no-ops on top of it. This is what the
+# *live* training loop applies by default when given a mesh
+# (``train.loop.LoopConfig.mesh`` -> ``launch.live``); the dry-run keeps
+# sweeping all of ``CD_GRAB_CANDIDATES`` and flags drift when the measured
+# best stops matching this default.
+CD_GRAB_DEFAULT_CONSTRAINT = "slab"
+
+
+def make_grad_pinner(params_tree, policy: ShardPolicy, mesh):
+    """tree->tree callable applying the *gradient* PartitionSpecs (FSDP
+    forced on, matching the grad/opt access pattern — see ``state_specs``)
+    to gradient-shaped pytrees via with_sharding_constraint. The single
+    ``constrain_grads`` every launch path (dry-run cells and the live loop)
+    passes to ``build_train_step``. Uses NamedShardings so it works without
+    an ambient ``with mesh:`` context."""
+    g_policy = dataclasses.replace(policy, fsdp=policy.fsdp or policy.zero1)
+    g_shardings = named(mesh, tree_specs(params_tree, g_policy))
+
+    def constrain_grads(tree):
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            g_shardings)
+    return constrain_grads
+
+
+def make_cd_constraints(candidate: Optional[str], params_tree, batch_tree,
+                        policy: ShardPolicy, mesh, *,
+                        data_axis: str = "data"):
+    """Resolve a ``CD_GRAB_CANDIDATES`` name into the explicit
+    ``CdGrabConstraints`` applied inside ``micro_workers`` — the single
+    source of truth shared by the dry-run hillclimb (``launch.dryrun`` via
+    ``launch.specs.make_cell``) and the live loop (``launch.live``), so the
+    constraint set the sweep measured is exactly the one training runs.
+
+    ``candidate=None`` resolves to ``CD_GRAB_DEFAULT_CONSTRAINT``.
+    ``batch_tree`` is the per-step batch pytree ([n_micro, micro, ...]
+    leaves — only its *structure* matters for the slab specs)."""
+    from repro.train.step import CdGrabConstraints
+
+    cand = candidate or CD_GRAB_DEFAULT_CONSTRAINT
+    assert cand in CD_GRAB_CANDIDATES, \
+        f"cd_constraints={cand!r}; known: {CD_GRAB_CANDIDATES}"
+
+    def pinner(spec_tree):
+        sh = named(mesh, spec_tree)
+        return lambda tree: jax.tree.map(
+            jax.lax.with_sharding_constraint, tree, sh)
+
+    stacked = cd_grab_stacked_grad_specs(params_tree, policy,
+                                         data_axis=data_axis)
+    return CdGrabConstraints(
+        slab=(pinner(cd_grab_slab_specs(batch_tree, data_axis=data_axis))
+              if cand != "none" else None),
+        grads=(pinner(stacked) if cand in ("slab_grads", "full") else None),
+        stash=pinner(stacked) if cand == "full" else None)
+
 
 def cd_grab_slab_specs(batch_tree, *, data_axis: str = "data"):
     """Specs for the per-timestep [W, micro, ...] batch slab inside the

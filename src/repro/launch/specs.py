@@ -17,16 +17,14 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.core.grab import GrabConfig
 from repro.launch.mesh import data_axes
-from repro.launch.sharding import (CD_GRAB_CANDIDATES, ShardPolicy,
-                                   cd_grab_slab_specs,
-                                   cd_grab_stacked_grad_specs,
-                                   cd_grab_state_specs, state_specs,
-                                   tree_specs, path_str)
+from repro.launch.sharding import (ShardPolicy, cd_grab_state_specs,
+                                   make_cd_constraints, make_grad_pinner,
+                                   state_specs, tree_specs, path_str)
 from repro.models import lm, whisper
 from repro.models.config import SHAPES_BY_NAME, ModelConfig
 from repro.optim import adamw, cosine
@@ -165,14 +163,7 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
         mb = shape.global_batch // n_micro
         assert shape.global_batch % n_micro == 0
 
-        import dataclasses as _dc
-        g_policy = _dc.replace(policy, fsdp=policy.fsdp or policy.zero1)
-        g_specs = tree_specs(params_abs, g_policy)
-
-        def constrain_grads(tree):
-            return jax.tree.map(
-                lambda x, s: jax.lax.with_sharding_constraint(x, s),
-                tree, g_specs)
+        constrain_grads = make_grad_pinner(params_abs, policy, mesh)
 
         if cfg.enc_dec:
             batch_abs = {
@@ -192,24 +183,11 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
 
         cd_cons = None
         if cd_grab:
+            # the dry-run sweeps all candidates, so its unpinned default is
+            # the weakest set ("none"), not the live loop's hillclimb winner
             cand = cd_constraints or "none"
-            assert cand in CD_GRAB_CANDIDATES, \
-                f"cd_constraints={cand!r}; known: {CD_GRAB_CANDIDATES}"
-            from repro.train.step import CdGrabConstraints
-
-            def pinner(spec_tree):
-                sh = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
-                                  is_leaf=lambda x: isinstance(x, P))
-                return lambda tree: jax.tree.map(
-                    jax.lax.with_sharding_constraint, tree, sh)
-
-            stacked = cd_grab_stacked_grad_specs(params_abs, policy)
-            cd_cons = CdGrabConstraints(
-                slab=(pinner(cd_grab_slab_specs(batch_abs))
-                      if cand != "none" else None),
-                grads=(pinner(stacked)
-                       if cand in ("slab_grads", "full") else None),
-                stash=pinner(stacked) if cand == "full" else None)
+            cd_cons = make_cd_constraints(cand, params_abs, batch_abs,
+                                          policy, mesh)
         else:
             cand = None
 

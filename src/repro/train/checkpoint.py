@@ -118,6 +118,11 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None):
     by_path = {e["path"]: e for e in manifest["leaves"]}
     new_leaves = []
     for name, tmpl in zip(names, leaves):
+        if name not in by_path:
+            raise ValueError(
+                f"checkpoint {path} has no leaf {name!r} (template/config "
+                f"mismatch — e.g. a checkpoint written without the sign "
+                f"buffer restored into a state that carries one)")
         entry = by_path[name]
         arr = np.load(os.path.join(path, entry["file"]))
         arr = arr.astype(np.dtype(str(tmpl.dtype))) if hasattr(tmpl, "dtype") else arr
@@ -142,8 +147,11 @@ class CheckpointManager:
     def save(self, step: int, tree, extra: Optional[dict] = None,
              blocking: bool = False):
         # Pull to host synchronously (cheap vs. training step; guarantees a
-        # consistent snapshot), write in the background.
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        # consistent snapshot — the loop donates its state buffers into the
+        # next step, so the copy must happen before dispatch continues),
+        # write in the background. One device_get for the whole tree: a
+        # single batched transfer, not one sync per leaf.
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
         self.wait()
 
         def _write():

@@ -2,20 +2,38 @@
 fault-tolerant checkpointing, assembled.
 
 This is the loop ``examples/train_lm.py`` and the convergence benchmarks
-drive. It is deliberately host-synchronous about *ordering* (signs come back
-once per step) and device-asynchronous about everything else (dispatch,
-checkpoint writes, prefetch).
+drive. It is **dispatch-asynchronous**: the steady-state step loop performs
+zero device→host transfers. The per-step balance signs accumulate in the
+device-resident ``[T, W]`` int8 buffer inside ``TrainState`` (written by the
+step at the GraB clock, donated across steps) and come back to the host
+exactly once per epoch, right before the Algorithm-3 reorder; losses stay on
+the device and are fetched in one batched transfer every ``log_every`` steps
+(and at the epoch boundary). ``LoopConfig.sync_transfers=True`` restores the
+legacy host-synchronous behavior — one loss + sign fetch per step — kept
+only as the A/B baseline for ``benchmarks/cd_grab_scaling.py
+--wallclock-loop``.
+
+Passing ``LoopConfig.mesh`` runs the launcher path on real hardware: the
+step is jitted with ``in_shardings`` from ``launch.sharding`` (the
+``cd_grab_state_specs`` worker-stacked stash rules for cd-grab,
+``constrain_grads`` from the param specs) and the hillclimb-winning
+``CdGrabConstraints`` from the dry-run sweeps — one source of truth with
+``launch.dryrun`` (see ``launch.live``).
+
+Resume is **exact**: a checkpoint (mid-epoch or boundary) carries the sign
+buffer and GraB state inside ``TrainState``, so the loop continues from the
+exact step it stopped at — no epoch replay, no stale running sum.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
-from repro.core.grab import GrabConfig
+from repro.core.grab import GrabConfig, grab_epoch_end, make_sketch
 from repro.core.orderings import OrderPolicy, make_policy
 from repro.data.loader import PermutedLoader
 from repro.train.checkpoint import CheckpointManager
@@ -34,6 +52,15 @@ class LoopConfig:
     keep_ckpts: int = 3
     log_every: int = 50
     seed: int = 0
+    # --- launcher path (see launch.live) -----------------------------------
+    mesh: Any = None              # jax Mesh: jit with explicit in_shardings,
+    #                               donate the state, apply the cd-grab
+    #                               constraint set below
+    shard_policy: Any = None      # launch.sharding.ShardPolicy (mesh only)
+    cd_constraints: Optional[str] = None  # CD_GRAB_CANDIDATES name; None =
+    #                               the measured hillclimb winner
+    # --- legacy host-synchronous dispatch (benchmark A/B only) -------------
+    sync_transfers: bool = False  # fetch loss + signs every step (blocking)
 
 
 def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
@@ -75,12 +102,36 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
                                       seed=loop_cfg.seed, **policy_kw)
     loader = PermutedLoader(dataset, policy, micro_size)
 
-    step_fn = jax.jit(build_train_step(
-        loss_fn, optimizer, lr_schedule, grab_cfg,
-        n_micro_per_epoch=n_micro_total, n_workers=n_workers))
+    sketch = None
+    if grab_cfg is not None and grab_cfg.sketch_dim > 0:
+        sketch = make_sketch(params, grab_cfg.sketch_dim)
 
-    state = init_train_state(params, optimizer, grab_cfg, n_workers=n_workers)
+    if loop_cfg.mesh is not None:
+        # launcher path: explicit in_shardings + constraint set from
+        # launch.sharding (one source of truth with the dry-run), donated
+        # state, initial placement onto the mesh
+        from repro.launch.live import build_live_step
+        tmpl_micro = dataset.batch(np.arange(micro_size))
+        batch_template = {k: np.stack([v] * loop_cfg.n_micro)
+                          for k, v in tmpl_micro.items()}
+        step_fn, state = build_live_step(
+            loss_fn, optimizer, lr_schedule, grab_cfg, mesh=loop_cfg.mesh,
+            params=params, batch_template=batch_template,
+            n_micro=loop_cfg.n_micro, n_micro_total=n_micro_total,
+            n_workers=n_workers, sketch=sketch,
+            shard_policy=loop_cfg.shard_policy,
+            cd_constraints=loop_cfg.cd_constraints)
+    else:
+        step_fn = jax.jit(build_train_step(
+            loss_fn, optimizer, lr_schedule, grab_cfg,
+            n_micro_per_epoch=n_micro_total, sketch=sketch,
+            n_workers=n_workers))
+        state = init_train_state(params, optimizer, grab_cfg,
+                                 n_workers=n_workers,
+                                 n_micro_per_epoch=n_micro_total)
+
     start_epoch = 0
+    resume_step = 0
     manager = None
     if loop_cfg.ckpt_dir:
         manager = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep_ckpts)
@@ -89,47 +140,84 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
             state = restored
             start_epoch = int(extra.get("epoch", 0))
             policy.load_state_dict(extra.get("order", {}))
-            # resume granularity is the epoch: a mid-epoch checkpoint's epoch
-            # replays from step 0 and re-records all its signs, so any
-            # restored partial buffer would double-count
+            # resume is exact: the checkpointed TrainState carries the GraB
+            # running state *and* the partial device sign buffer for the
+            # interrupted epoch, so we continue from the very next step —
+            # nothing is replayed against a stale running sum, and any
+            # host-side pending records are superseded by the buffer
             policy.discard_pending()
-            print(f"[loop] resumed from step {step}, epoch {start_epoch}")
+            resume_step = int(step) - start_epoch * steps_per_epoch
+            assert 0 <= resume_step <= steps_per_epoch, \
+                (step, start_epoch, steps_per_epoch)
+            print(f"[loop] resumed from step {step}: epoch {start_epoch}, "
+                  f"in-epoch step {resume_step}")
 
-    from repro.core.grab import grab_epoch_end  # local import to avoid cycle
+    # built once — rebuilding jax.jit(lambda ...) at each boundary retraced
+    # (and recompiled) the epoch-end rollover every epoch. On the mesh path
+    # the rollover's fresh zero trees would come back with
+    # propagation-chosen (replicated) shardings and poison the donated
+    # step's committed in_shardings, so pin the outputs to the state's own
+    # layout (restore preserves it, so this holds across resumes too).
+    epoch_end_kw = {}
+    if use_grab and loop_cfg.mesh is not None:
+        epoch_end_kw["out_shardings"] = jax.tree.map(lambda x: x.sharding,
+                                                     state.grab)
+    epoch_end_fn = jax.jit(lambda g: grab_epoch_end(g, grab_cfg),
+                           **epoch_end_kw)
 
     history = []
+    pending = []      # (epoch, global_step, device loss) not yet fetched
+
+    def flush_losses():
+        """One batched device→host transfer for all pending loss scalars."""
+        if not pending:
+            return None
+        vals = jax.device_get([loss for _, _, loss in pending])
+        for (ep, st, _), v in zip(pending, vals):
+            history.append({"epoch": ep, "step": st, "loss": float(v)})
+        pending.clear()
+        return history[-1]["loss"]
+
     for epoch in range(start_epoch, loop_cfg.epochs):
         t0 = time.time()
-        micro_iter = loader.epoch(epoch)
-        for step_i in range(steps_per_epoch):
+        start_s = resume_step if epoch == start_epoch else 0
+        micro_iter = loader.epoch(epoch, start_step=start_s * loop_cfg.n_micro)
+        for step_i in range(start_s, steps_per_epoch):
             micros = []
             for _ in range(loop_cfg.n_micro):
                 _, mb = next(micro_iter)
                 micros.append(mb)
             batch = {k: np.stack([m[k] for m in micros]) for k in micros[0]}
             state, metrics = step_fn(state, batch)
-            if use_grab:
-                # buffered on the policy so a mid-epoch checkpoint carries
-                # the pending signs ([T, W] per step for cd-grab)
-                policy.record_step_signs(np.asarray(metrics["signs"]))
-            loss = float(metrics["loss"])
-            history.append({"epoch": epoch, "step": int(state.step),
-                            "loss": loss})
-            if loop_cfg.log_every and step_i % loop_cfg.log_every == 0:
+            global_step = epoch * steps_per_epoch + step_i + 1
+            pending.append((epoch, global_step, metrics["loss"]))
+            if loop_cfg.sync_transfers:
+                # legacy host-synchronous dispatch: block on the loss and the
+                # step's signs right here (the per-step sync the async loop
+                # exists to avoid; ordering still consumes the device buffer)
+                np.asarray(metrics["signs"])
+                loss = flush_losses()
+            elif loop_cfg.log_every and step_i % loop_cfg.log_every == 0:
+                loss = flush_losses()
+            else:
+                loss = None
+            if (loss is not None and loop_cfg.log_every
+                    and step_i % loop_cfg.log_every == 0):
                 print(f"[loop] epoch {epoch} step {step_i}/{steps_per_epoch} "
                       f"loss {loss:.4f}")
             if (manager and loop_cfg.ckpt_every_steps
-                    and int(state.step) % loop_cfg.ckpt_every_steps == 0):
-                manager.save(int(state.step), state,
+                    and global_step % loop_cfg.ckpt_every_steps == 0):
+                manager.save(global_step, state,
                              extra={"epoch": epoch, "order": policy.state_dict()})
-        # epoch boundary: commit the Alg.3 reorder (cd-grab: the coordinated
-        # global two-pointer pass), roll GraB means
+        # epoch boundary: ONE sign fetch for the whole epoch, then commit the
+        # Alg.3 reorder (cd-grab: the coordinated global two-pointer pass)
+        # and roll the GraB means
         if use_grab:
-            policy.end_epoch(epoch)
-            state = state._replace(grab=jax.jit(
-                lambda g: grab_epoch_end(g, grab_cfg))(state.grab))
+            policy.apply_epoch_signs(epoch, jax.device_get(state.signs))
+            state = state._replace(grab=epoch_end_fn(state.grab))
+        flush_losses()
         if manager:
-            manager.save(int(state.step), state,
+            manager.save((epoch + 1) * steps_per_epoch, state,
                          extra={"epoch": epoch + 1, "order": policy.state_dict()})
         if hooks:
             hooks(epoch, state, history)
@@ -138,6 +226,7 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
             ep_losses = [h["loss"] for h in history if h["epoch"] == epoch]
             print(f"[loop] epoch {epoch} done in {dt:.1f}s "
                   f"mean loss {np.mean(ep_losses):.4f}")
+    flush_losses()
     if manager:
         manager.wait()
     return state, history

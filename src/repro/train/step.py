@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grab import (GrabConfig, Sketch, grab_step, grab_step_workers,
-                             init_grab_state, init_parallel_grab_state)
+                             init_grab_state, init_parallel_grab_state,
+                             init_sign_buffer)
 from repro.optim.optimizers import Optimizer
 from repro.train.state import TrainState
 from repro.utils.tree import tree_zeros_like
@@ -64,6 +65,10 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
     If ``grab_cfg`` is None the step is a plain accumulate-and-apply (used
     for RR/SO/FlipFlop — identical compute, no balancing).
     Output metrics include ``signs: [n_micro]`` (+1/-1; zeros when GraB off).
+    When ``state.signs`` carries the device-resident ``[T, W]`` buffer
+    (``init_train_state(..., n_micro_per_epoch=N)``), the step also appends
+    its sign rows there at offset ``grab.t`` — the loop then never reads
+    ``metrics["signs"]``, fetching the whole buffer once per epoch.
 
     ``n_workers > 1`` is the CD-GraB path: the ``n_micro`` microbatches are
     regrouped as [T, W, ...] (T timesteps of W per-worker microbatches, the
@@ -165,8 +170,18 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
         grads = jax.tree.map(lambda a: a / n_steps, acc)
         lr = lr_schedule(state.step)
         opt_state, params = optimizer.update(state.opt, grads, params, lr)
+        new_signs = state.signs
+        if state.signs is not None and grab_cfg is not None:
+            # device-resident sign buffer: append this step's rows at the
+            # GraB clock (grab.t before the scan = timesteps already done
+            # this epoch), so the buffer is epoch-positional and a resumed
+            # step overwrites exactly the rows it would have produced
+            rows = signs if n_workers > 1 else signs[:, None]
+            new_signs = jax.lax.dynamic_update_slice(
+                state.signs, rows.astype(jnp.int8),
+                (state.grab.t, jnp.int32(0)))
         new_state = TrainState(params=params, opt=opt_state, grab=grab_state,
-                               step=state.step + 1)
+                               step=state.step + 1, signs=new_signs)
         metrics = {"loss": losses.mean(), "signs": signs, "lr": lr}
         return new_state, metrics
 
@@ -175,12 +190,19 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
 
 def init_train_state(params, optimizer: Optimizer,
                      grab_cfg: Optional[GrabConfig] = None,
-                     n_workers: int = 1) -> TrainState:
+                     n_workers: int = 1,
+                     n_micro_per_epoch: int = 0) -> TrainState:
+    """``n_micro_per_epoch > 0`` (and a grab_cfg) allocates the
+    device-resident ``[T, W]`` int8 sign buffer in ``state.signs`` — the live
+    loop's once-per-epoch sign fetch path. Dry-run cells and unit steps that
+    read ``metrics["signs"]`` directly leave it at 0 (``signs=None``)."""
     if grab_cfg is None:
         grab = None
     elif n_workers > 1:
         grab = init_parallel_grab_state(params, grab_cfg, n_workers)
     else:
         grab = init_grab_state(params, grab_cfg)
+    signs = (init_sign_buffer(n_micro_per_epoch, n_workers)
+             if grab_cfg is not None and n_micro_per_epoch else None)
     return TrainState(params=params, opt=optimizer.init(params), grab=grab,
-                      step=jnp.int32(0))
+                      step=jnp.int32(0), signs=signs)

@@ -337,9 +337,11 @@ def test_cd_grab_sharding_specs():
 
 
 def test_cd_grab_resume_from_mid_epoch_checkpoint():
-    """A checkpoint written mid-epoch carries pending signs; the loop's
-    resume granularity is the epoch, so the replayed epoch must re-record
-    them from scratch instead of double-counting (and not crash)."""
+    """A checkpoint written mid-epoch carries the *device-resident* sign
+    buffer (partially filled) inside the TrainState — the policy holds no
+    host-side pending signs — and resume continues from the exact step,
+    reproducing the uninterrupted run bit-for-bit instead of replaying the
+    epoch against a stale running sum."""
     from repro.data.synthetic import synthetic_classification
     from repro.models.paper_models import logreg_init, logreg_loss
     from repro.optim import constant, sgdm
@@ -367,17 +369,30 @@ def test_cd_grab_resume_from_mid_epoch_checkpoint():
     with tempfile.TemporaryDirectory() as d:
         cfg = LoopConfig(epochs=1, n_micro=8, ordering="cd-grab", workers=2,
                          ckpt_dir=d, ckpt_every_steps=1, log_every=0)
-        run_training(loss, params, sgdm(0.9), constant(0.05), DS(x, y), 4, cfg)
+        state_full, _ = run_training(loss, params, sgdm(0.9), constant(0.05),
+                                     DS(x, y), 4, cfg)
         # simulate a crash after the first optimizer step's save: drop the
         # epoch-boundary checkpoint so the newest one is genuinely mid-epoch
         ckpts = list_checkpoints(d)
         assert len(ckpts) == 2
         shutil.rmtree(ckpts[-1][1])
         with open(os.path.join(ckpts[0][1], "manifest.json")) as f:
-            extra = json.load(f)["extra"]
+            manifest = json.load(f)
+        extra = manifest["extra"]
         assert extra["epoch"] == 0
-        assert len(extra["order"]["pending"]["__ndarray__"]) > 0
-        _, hist = run_training(loss, params, sgdm(0.9), constant(0.05),
-                               DS(x, y), 4, cfg)
-        assert {h["epoch"] for h in hist} == {0}      # epoch 0 replays cleanly
-        assert np.isfinite(hist[-1]["loss"])
+        # pending signs live in the device buffer, not on the policy
+        assert len(extra["order"]["pending"]["__ndarray__"]) == 0
+        sign_entry = next(e for e in manifest["leaves"]
+                          if e["path"].lstrip(".") == "signs")
+        assert sign_entry["dtype"] == "int8"
+        buf = np.load(os.path.join(ckpts[0][1], sign_entry["file"]))
+        assert buf.shape == (8, 2)                   # [T = 16/2, W = 2]
+        assert np.any(buf[:4] != 0)                  # step 1's rows recorded
+        assert np.all(buf[4:] == 0)                  # step 2's rows pending
+        state_res, hist = run_training(loss, params, sgdm(0.9),
+                                       constant(0.05), DS(x, y), 4, cfg)
+        assert {h["epoch"] for h in hist} == {0}
+        assert len(hist) == 1                        # only step 2 re-ran
+        # exact resume: bit-identical to the uninterrupted run
+        for a, b in zip(jax.tree.leaves(state_full), jax.tree.leaves(state_res)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -54,6 +54,65 @@ def test_prefetching_epoch_iterates_all_steps():
     assert steps == list(range(8))
 
 
+class _Boom(Exception):
+    pass
+
+
+def test_loader_surfaces_producer_exceptions():
+    """A dataset failure inside the prefetch thread must raise in the
+    consumer, not silently truncate the epoch (which would let the loop
+    commit an epoch-boundary reorder on a partial sign stream)."""
+
+    class RaisingDS:
+        def __len__(self):
+            return 32
+
+        def batch(self, idx):
+            raise _Boom("backend went away")
+
+    loader = PermutedLoader(RaisingDS(), make_policy("so", 8, seed=0), 4)
+    with pytest.raises(_Boom, match="backend went away"):
+        list(loader.epoch(0))
+
+
+def test_loader_surfaces_mid_epoch_exception_after_good_steps():
+    class FlakyDS:
+        def __len__(self):
+            return 32
+
+        def batch(self, idx):
+            if idx[0] >= 16:
+                raise _Boom("row out of range")
+            return {"x": np.asarray(idx)}
+
+    loader = PermutedLoader(FlakyDS(), make_policy("so", 8, seed=0), 4,
+                            prefetch=1)
+    seen = []
+    with pytest.raises(_Boom):
+        for s, _ in loader.epoch(0):
+            seen.append(s)
+    assert len(seen) < 8                      # truncated *with* an error
+
+
+def test_loader_abandoned_consumer_unblocks_producer():
+    """Breaking out of the epoch mid-way (consumer exception, early stop)
+    must not leave the producer thread blocked forever on a full queue."""
+    import threading
+    import time
+
+    ds = SyntheticTextDataset(64, 8, 64, seed=0)
+    loader = PermutedLoader(ds, make_policy("so", 16, seed=0), 4, prefetch=1)
+    before = threading.active_count()
+    gen = loader.epoch(0)
+    next(gen)
+    gen.close()                               # abandon mid-epoch
+    deadline = time.time() + 5.0
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= before, \
+        "producer thread still alive after the consumer abandoned the epoch"
+
+
 @settings(max_examples=10, deadline=None)
 @given(n=st.sampled_from([8, 16, 32]), micro=st.sampled_from([2, 4, 8]),
        epoch=st.integers(0, 3))
