@@ -31,6 +31,12 @@ Two measurements, both CPU-friendly:
    the async loop (device-resident sign buffer, ≤1 fetch per epoch) — the
    per-epoch win of ISSUE 5's dispatch-asynchronous refactor.
 
+5. **Compressed sign wire** (``--sign-wire``): herding bound with the exact
+   f32 sign wire vs the quantized int8 wire (sketch-mode dataflow), the
+   relative ordering-quality drift per epoch, and the analytic wire
+   bytes/device for each format — the quality-vs-bandwidth trade of
+   ISSUE 6's int8 packed exchange.
+
 CSV rows: kind,W,epoch,value. Every run also emits ``BENCH_cd_grab.json``
 (``--json`` to relocate) with the same rows plus run metadata, so the perf
 trajectory is recorded per commit.
@@ -52,14 +58,25 @@ from repro.core.orderings import ParallelGrabOrder
 
 
 def coordinated_bounds(zs: np.ndarray, n_workers: int, epochs: int,
-                       seed: int = 0) -> list:
-    """Herding bound of the CD-GraB coordinated global order per epoch."""
+                       seed: int = 0, sketch_dim: int = 0,
+                       sign_wire: str = "f32") -> list:
+    """Herding bound of the CD-GraB coordinated global order per epoch.
+
+    ``sketch_dim``/``sign_wire`` route the balancing through the sketch-mode
+    sign dataflow (the path the wire format exists on) — the int8-vs-f32
+    comparison measures the ordering-quality drift the quantized wire buys
+    its ~4x byte saving with."""
     n, d = zs.shape
     policy = ParallelGrabOrder(n, workers=n_workers, seed=seed)
-    cfg = GrabConfig(pair_balance=True)
+    cfg = GrabConfig(pair_balance=True, sketch_dim=sketch_dim,
+                     sign_wire=sign_wire)
+    sketch = None
+    if sketch_dim > 0:
+        from repro.core.grab import make_sketch
+        sketch = make_sketch({"g": jnp.zeros((d,), jnp.float32)}, sketch_dim)
     tmpl = {"g": jnp.zeros((d,), jnp.float32)}
     state = init_parallel_grab_state(tmpl, cfg, n_workers)
-    step = jax.jit(lambda st, g: grab_step_workers(st, g, cfg))
+    step = jax.jit(lambda st, g: grab_step_workers(st, g, cfg, sketch))
     zs_j = jnp.asarray(zs, jnp.float32)
 
     bounds = []
@@ -94,6 +111,49 @@ def run_herding(n: int, d: int, epochs: int, workers: tuple, seed: int):
     for w in workers:
         for epoch, b in enumerate(coordinated_bounds(zs, w, epochs, seed)):
             rows.append(("herding", w, epoch, b))
+    return rows
+
+
+def run_sign_wire(n: int, d: int, epochs: int, workers: tuple, seed: int,
+                  k: int):
+    """Compressed-wire axis (``--sign-wire``): what the int8 sign wire costs
+    in ordering quality and what it saves on the wire, per W.
+
+    Quality: the herding harness runs twice through the *sketch-mode* sign
+    dataflow (the path the wire format lives on) — once exact
+    (``sign_wire="f32"``), once quantized (``"int8"``) — and reports both
+    bounds plus their relative drift per epoch. The drift is the entire
+    quality price of the compression: signs are still exact ±1, only the
+    sketched pair-difference rows the scan dots against are rounded.
+
+    Wire: analytic bytes/device/epoch for each format from
+    ``sign_collective_terms`` (W workers on W devices, one exchange per odd
+    step for f32, one deferred packed gather for int8) and their ratio —
+    4k / (k + 4) per row, ≥ 3.5 for k ≥ 56.
+    """
+    from repro.launch.roofline import sign_collective_terms
+
+    rng = np.random.default_rng(seed)
+    zs = rng.normal(size=(n, d)).astype(np.float32)
+    rows = []
+    for w in workers:
+        b_f32 = coordinated_bounds(zs, w, epochs, seed, sketch_dim=k,
+                                   sign_wire="f32")
+        b_int8 = coordinated_bounds(zs, w, epochs, seed, sketch_dim=k,
+                                    sign_wire="int8")
+        for epoch, (bf, b8) in enumerate(zip(b_f32, b_int8)):
+            rows += [("herding_f32", w, epoch, bf),
+                     ("herding_int8", w, epoch, b8),
+                     ("herding_wire_drift", w, epoch, (b8 - bf) / bf)]
+        if w > 1:
+            pair_steps = (n // w) // 2
+            tf = sign_collective_terms(w, k, pair_steps, group=w, wire="f32")
+            t8 = sign_collective_terms(w, k, pair_steps, group=w, wire="int8")
+            bpd_f, bpd_8 = (tf["sign_collective_bytes_per_dev"],
+                            t8["sign_collective_bytes_per_dev"])
+            rows += [("sign_bytes_per_dev_f32", w, 0, bpd_f),
+                     ("sign_bytes_per_dev_int8", w, 0, bpd_8),
+                     ("sign_bytes_ratio", w, 0, bpd_f / bpd_8)]
     return rows
 
 
@@ -256,6 +316,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--train", action="store_true",
                     help="also run the end-to-end loop sweep")
+    ap.add_argument("--sign-wire", action="store_true",
+                    help="also run the compressed-wire axis: herding bound "
+                         "f32 vs int8 sign wire (sketch mode) plus analytic "
+                         "bytes/device per format (see run_sign_wire)")
+    ap.add_argument("--wire-k", type=int, default=32,
+                    help="sketch dim for --sign-wire (wire bytes ratio is "
+                         "4k/(k+4))")
     ap.add_argument("--wallclock", action="store_true",
                     help="also time the sign dataflow vs the device step")
     ap.add_argument("--wallclock-d", type=int, default=65_536,
@@ -275,6 +342,9 @@ def main(argv=None):
                        args.seed)
     if args.train:
         rows += run_train(args.epochs, tuple(args.workers), args.seed)
+    if args.sign_wire:
+        rows += run_sign_wire(args.n, args.d, args.epochs,
+                              tuple(args.workers), args.seed, args.wire_k)
     if args.wallclock:
         rows += run_wallclock(tuple(args.workers), d=args.wallclock_d,
                               seed=args.seed)
@@ -293,6 +363,7 @@ def main(argv=None):
                        "workers": list(args.workers), "seed": args.seed,
                        "wallclock_d": args.wallclock_d,
                        "loop_epochs": args.loop_epochs,
+                       "wire_k": args.wire_k,
                        "devices": jax.device_count()},
             "rows": [list(r) for r in rows],
         }

@@ -52,6 +52,15 @@ def main():
     ap.add_argument("--sketch-dim", type=int, default=0,
                     help="GraB sketch width k (0 = full-pytree balance; "
                          "cd-grab on a mesh uses k for the sign all-gather)")
+    ap.add_argument("--sign-wire", default="f32", choices=["f32", "int8"],
+                    help="cd-grab coordination wire: int8 packs the [W, k] "
+                         "sketched rows to [W, k+4] int8 before the gather "
+                         "(~4x fewer bytes, bit-identical signs on every "
+                         "shard) and defers the exchange to one "
+                         "overlappable gather per step on the mesh path")
+    ap.add_argument("--sign-hier", type=int, default=0,
+                    help="two-stage sign gather: group size L for the "
+                         "intra-host stage (0 = flat single-stage gather)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--epochs", type=int, default=None)
     args = ap.parse_args()
@@ -75,11 +84,14 @@ def main():
     total = (args.epochs or p["epochs"]) * steps_per_epoch
     loop = LoopConfig(epochs=args.epochs or p["epochs"], n_micro=p["n_micro"],
                       ordering=args.ordering, workers=args.workers,
+                      sign_wire=args.sign_wire, sign_hier=args.sign_hier,
                       ckpt_dir=args.ckpt_dir, log_every=10, mesh=mesh)
     grab_cfg = None
     if args.ordering in ("grab", "cd-grab"):
         grab_cfg = GrabConfig(pair_balance=args.ordering == "cd-grab",
-                              sketch_dim=min(args.sketch_dim, n_params))
+                              sketch_dim=min(args.sketch_dim, n_params),
+                              sign_wire=args.sign_wire,
+                              sign_hier=args.sign_hier)
     state, hist = run_training(loss_fn, params, adamw(),
                                cosine(p["lr"], total, warmup=total // 20),
                                ds, p["micro"], loop, grab_cfg=grab_cfg)

@@ -46,6 +46,33 @@ it when ``impl`` resolves to ``"pallas"`` (default on a real TPU backend;
 override with ``REPRO_COORD_IMPL=pallas|xla``). The SPMD mesh path always
 takes the XLA scan — a pallas_call inside pjit is opaque to the partitioner —
 and the Alweiss balancer stays on XLA too (it needs a per-row PRNG split).
+
+Compressed sign wire (``wire="int8"``)
+--------------------------------------
+The sketched pair differences exist only to produce ±1 sign decisions, so
+their wire precision is negotiable in a way gradients are not: each shard
+quantizes its own rows to int8 with an in-band per-row scale
+(``optim.compression.pack_rows_int8``, [W, k] f32 -> [W, k+4] int8) *before*
+the all-gather, cutting the collective to ~1/4 of the f32 bytes. Determinism
+is preserved by construction — the compressed bytes are produced once on the
+owning shard, the gather makes them byte-identical everywhere, and every
+shard dequantizes the same bytes inside the replicated scan, so all shards
+still derive identical signs. The quantization does perturb *which* signs
+come out vs the exact wire (bounded ordering-quality drift, measured by
+``benchmarks/cd_grab_scaling.py --sign-wire``).
+
+Two more latency/topology levers stack on top:
+
+* **hierarchical gather** (``hier_group=L``) — two-stage exchange: gather
+  within contiguous groups of L shards (intra-host links), then exchange the
+  per-group blocks across groups (one cross-host message per host rather
+  than per worker), so cross-host wire cost scales with hosts, not workers.
+* **deferred exchange** (:func:`mesh_deferred_pair_signs`) — the train step
+  stashes each timestep's packed rows and performs ONE gather + replicated
+  scan per optimizer step instead of one collective per pair timestep; the
+  single gather sits outside the microbatch scan where the compiler can
+  overlap it with the gradient-mean/optimizer epilogue (see
+  ``train.step.build_train_step``).
 """
 from __future__ import annotations
 
@@ -56,6 +83,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.balance import alweiss_sign, deterministic_sign
+from repro.optim.compression import pack_rows_int8, unpack_rows_int8
 
 
 def local_rank_signs(local_sums: jax.Array, local_zs: jax.Array,
@@ -94,6 +122,7 @@ def signs_from_pair_signs(pair_signs: jax.Array) -> jax.Array:
 
 
 _COORD_IMPLS = ("pallas", "xla")
+SIGN_WIRES = ("f32", "int8")
 
 
 def _validate_impl(impl: str, source: str) -> str:
@@ -102,6 +131,53 @@ def _validate_impl(impl: str, source: str) -> str:
             f"{source}={impl!r} is not a known coordinated-scan "
             f"implementation; allowed values: {list(_COORD_IMPLS)}")
     return impl
+
+
+def _validate_wire(wire: str, source: str = "wire") -> str:
+    if wire not in SIGN_WIRES:
+        raise ValueError(
+            f"{source}={wire!r} is not a known sign-wire format; allowed "
+            f"values: {list(SIGN_WIRES)}")
+    return wire
+
+
+def quantize_wire(zs: jax.Array) -> jax.Array:
+    """The exact value perturbation the int8 wire applies: per-row quantize +
+    dequantize (``[..., k]`` f32 -> f32). The host/reference scan consumes
+    these so mesh-vs-host bit-identity holds for the compressed wire too —
+    both paths run the identical elementwise pack/unpack on each row, the
+    mesh path merely moving the packed bytes through the gather in between."""
+    return unpack_rows_int8(pack_rows_int8(zs))
+
+
+def hier_all_gather(x: jax.Array, axis_name: str, *, axis: int,
+                    total: int, hier_group: int = 0) -> jax.Array:
+    """All-gather ``x`` over ``axis_name``, optionally in two stages.
+
+    ``hier_group=L`` (with ``1 < L < total`` dividing ``total``) models a
+    host hierarchy over a flat mesh axis of ``total`` shards: stage 1
+    gathers within each contiguous group of L shards (intra-host links),
+    stage 2 exchanges the L-shard blocks across groups at fixed intra-group
+    rank (one cross-host message per *group*, so cross-host cost scales with
+    hosts rather than workers). Group order is ascending in both stages, so
+    the result's row order — hence the coordinated scan's worker order — is
+    identical to the flat gather's. ``hier_group`` of 0/1/``total`` is the
+    flat single-stage gather."""
+    if hier_group in (0, 1, total):
+        return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+    if total % hier_group:
+        raise ValueError(
+            f"hier_group={hier_group} must divide the {axis_name!r} axis "
+            f"size {total}")
+    hosts = total // hier_group
+    intra = [[h * hier_group + l for l in range(hier_group)]
+             for h in range(hosts)]
+    cross = [[h * hier_group + l for h in range(hosts)]
+             for l in range(hier_group)]
+    x = jax.lax.all_gather(x, axis_name, axis=axis, tiled=True,
+                           axis_index_groups=intra)
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True,
+                              axis_index_groups=cross)
 
 
 def _coord_impl() -> str:
@@ -119,7 +195,7 @@ def _coord_impl() -> str:
 def coordinated_pair_signs(s: jax.Array, zs: jax.Array, *,
                            kind: str = "deterministic", c: float = 30.0,
                            key: jax.Array | None = None,
-                           impl: str | None = None):
+                           impl: str | None = None, wire: str = "f32"):
     """CD-GraB server step: balance the W workers' pair-difference vectors
     sequentially (worker-index order) against one *shared* running sum.
 
@@ -134,11 +210,17 @@ def coordinated_pair_signs(s: jax.Array, zs: jax.Array, *,
     needs per-row PRNG splits); "xla" is the plain ``lax.scan``; None picks
     via :func:`_coord_impl`. The SPMD path (:func:`mesh_pair_signs`) pins
     "xla": a pallas_call inside pjit is opaque to the partitioner.
+
+    ``wire="int8"`` balances the quantize-dequantized rows
+    (:func:`quantize_wire`) — this is the host-side reference for what the
+    compressed mesh wire computes, bit-identical to the mesh path.
     """
     if impl is None:
         impl = _coord_impl()
     else:
         _validate_impl(impl, "impl")
+    if _validate_wire(wire) == "int8":
+        zs = quantize_wire(zs)
     if impl == "pallas" and kind == "deterministic":
         from repro.kernels.ops import coord_balance
         signs, new_s = coord_balance(s, zs)
@@ -164,7 +246,8 @@ def coordinated_pair_signs(s: jax.Array, zs: jax.Array, *,
 
 def mesh_pair_signs(s: jax.Array, z_local: jax.Array, mesh,
                     data_axis: str = "data", *, kind: str = "deterministic",
-                    c: float = 30.0, key: jax.Array | None = None):
+                    c: float = 30.0, key: jax.Array | None = None,
+                    wire: str = "f32", hier_group: int = 0):
     """Coordinated pair signs on a mesh: the tiny sign dataflow of CD-GraB.
 
     ``z_local``: [W, k] sketched pair differences, sharded over ``data_axis``
@@ -180,17 +263,33 @@ def mesh_pair_signs(s: jax.Array, z_local: jax.Array, mesh,
     all W shards; never fold a shard id into this key (that would degrade
     CD-GraB to W independent balancing walks).
 
+    ``wire="int8"`` packs each shard's rows to ``[W_local, k+4]`` int8
+    *before* the gather (values + in-band per-row scale, ~4x fewer wire
+    bytes) and dequantizes the gathered bytes inside the replicated scan.
+    The bytes are produced once on the owning shard, so every shard
+    dequantizes identical data — the determinism invariant holds by
+    construction, for the Alweiss kind too (the quantization happens before
+    any coin flip). ``hier_group=L`` routes the gather through the two-stage
+    intra-host/cross-host exchange (:func:`hier_all_gather`).
+
     Returns (new_s [k] replicated, signs [W] replicated). Always takes the
     XLA scan (``impl="xla"``): this runs under the SPMD partitioner, where a
     pallas_call is opaque.
     """
     from jax.experimental.shard_map import shard_map
 
+    _validate_wire(wire)
+    total = mesh.shape[data_axis]
     if key is None:
         key = jax.random.PRNGKey(0)
 
     def fn(s_r, z_l, key_r):
-        zs = jax.lax.all_gather(z_l, data_axis, axis=0, tiled=True)
+        if wire == "int8":
+            z_l = pack_rows_int8(z_l)
+        zs = hier_all_gather(z_l, data_axis, axis=0, total=total,
+                             hier_group=hier_group)
+        if wire == "int8":
+            zs = unpack_rows_int8(zs)
         return coordinated_pair_signs(s_r, zs, kind=kind, c=c, key=key_r,
                                       impl="xla")
 
@@ -198,3 +297,62 @@ def mesh_pair_signs(s: jax.Array, z_local: jax.Array, mesh,
                      in_specs=(P(), P(data_axis, None), P()),
                      out_specs=(P(), P()),
                      check_rep=False)(s, z_local, key)
+
+
+def mesh_deferred_pair_signs(s: jax.Array, packed: jax.Array, t0: jax.Array,
+                             mesh, data_axis: str = "data", *,
+                             hier_group: int = 0):
+    """Deferred (batched) compressed sign exchange: ONE gather + replicated
+    scan for a whole optimizer step's worth of pair timesteps.
+
+    ``packed``: [T, W, k+4] int8 — the per-timestep packed rows the microbatch
+    scan stashed (``grab.grab_step_workers_collect``), sharded over
+    ``data_axis`` on the worker axis; stash timesteps hold all-zero rows.
+    ``t0``: replicated scalar — the GraB clock at the first of the T
+    timesteps, which fixes the stash/balance parity of each row block.
+    ``s``: [k] replicated running sum.
+
+    The replicated scan walks all T·W rows in time-major worker-index order —
+    exactly the stream the per-step exchange would have fed it — skipping
+    stash rows bit-exactly (``s`` passes through untouched, sign 0, matching
+    ``grab_step_workers``' even-step output). Deterministic balancer only:
+    batching Alweiss would need the stashed rows to replay the per-timestep
+    PRNG stream, which the per-step compressed exchange already handles.
+
+    Because this sits *outside* the microbatch scan, the compiler is free to
+    overlap the gather with the gradient-mean/optimizer epilogue — the
+    compute-overlap half of the deferred design (see
+    ``train.step.build_train_step``).
+
+    Returns (new_s [k] replicated, signs [T, W] int32 replicated, zeros on
+    stash timesteps).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    total = mesh.shape[data_axis]
+
+    def fn(s_r, p_l, t0_r):
+        p = hier_all_gather(p_l, data_axis, axis=1, total=total,
+                            hier_group=hier_group)
+        rows = unpack_rows_int8(p)                        # [T, W, k]
+        n_t, n_w, k = rows.shape
+        balance = ((t0_r + jnp.arange(n_t)) % 2) == 1     # odd t balances
+        row_live = jnp.repeat(balance, n_w)               # [T*W]
+
+        def body(s_c, xs):
+            z, live = xs
+            eps = jnp.where(live, deterministic_sign(jnp.vdot(s_c, z)),
+                            jnp.int32(0))
+            # where() (not `+ eps*z` with z=0) keeps stash rows bit-exact:
+            # adding ±0.0 can flip a -0.0 coordinate of s to +0.0
+            s_n = jnp.where(live, s_c + eps.astype(jnp.float32) * z, s_c)
+            return s_n, eps
+
+        new_s, eps = jax.lax.scan(body, s_r,
+                                  (rows.reshape(n_t * n_w, k), row_live))
+        return new_s, eps.reshape(n_t, n_w)
+
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(P(), P(None, data_axis, None), P()),
+                     out_specs=(P(), P()),
+                     check_rep=False)(s, packed, t0)

@@ -53,6 +53,14 @@ class GrabConfig:
     # it to (+e, -e) per pair (see orderings.expand_pair_signs).
     pair_balance: bool = False
     seed: int = 0
+    # Sign-wire format for the CD-GraB coordination collective
+    # (distributed.SIGN_WIRES): "f32" gathers the raw [W, k] sketched rows,
+    # "int8" packs them to [W, k+4] int8 (per-row scale in-band) before the
+    # gather — ~4x fewer wire bytes, signs still bit-identical on every
+    # shard. sign_hier=L routes the gather through the two-stage
+    # intra-host(L)/cross-host exchange; 0 is the flat gather.
+    sign_wire: str = "f32"
+    sign_hier: int = 0
 
 
 class GrabState(NamedTuple):
@@ -325,10 +333,12 @@ def grab_step_workers(state: GrabState, grads, cfg: GrabConfig,
         if mesh is not None:
             new_s, eps_bal = mesh_pair_signs(
                 state.s, zs, mesh, data_axis, kind=cfg.balancer,
-                c=cfg.alweiss_c, key=sub)
+                c=cfg.alweiss_c, key=sub, wire=cfg.sign_wire,
+                hier_group=cfg.sign_hier)
         else:
             new_s, eps_bal = coordinated_pair_signs(
-                state.s, zs, kind=cfg.balancer, c=cfg.alweiss_c, key=sub)
+                state.s, zs, kind=cfg.balancer, c=cfg.alweiss_c, key=sub,
+                wire=cfg.sign_wire)
     else:
         def one_worker(carry, z_w):
             s_c, key_c = carry
@@ -348,6 +358,47 @@ def grab_step_workers(state: GrabState, grads, cfg: GrabConfig,
                              st_stash, st_bal)
     eps = jnp.where(even, eps_stash, eps_bal.astype(jnp.int32))
     return new_state, eps
+
+
+def grab_step_workers_collect(state: GrabState, grads, cfg: GrabConfig,
+                              sketch: Sketch):
+    """Collect-only half of the deferred compressed exchange: like
+    :func:`grab_step_workers` but instead of running the coordination
+    collective per timestep, it *emits* this timestep's packed int8 wire row
+    and leaves the running sum untouched.
+
+    Even (stash) timesteps update the pair stash and emit an all-zero row;
+    odd timesteps emit ``pack_rows_int8`` of the [W, k] sketched differences.
+    The train step stacks the emitted rows over its microbatch scan and hands
+    the [T, W, k+4] block to ``distributed.mesh_deferred_pair_signs`` — ONE
+    gather + replicated scan per optimizer step, outside the scan where it
+    overlaps the epilogue. The signs and final ``s`` that scan produces are
+    bit-identical to the per-step ``wire="int8"`` path's (the rows carry the
+    same bytes, consumed in the same time-major worker order).
+
+    Deterministic balancer + sketch mode only — the per-step exchange covers
+    Alweiss (its PRNG stream is per-timestep) and full-pytree mode (no
+    fixed-width row to pack). Returns (new_state, packed [W, k+4] int8).
+    """
+    from repro.optim.compression import pack_rows_int8
+
+    assert cfg.pair_balance and cfg.sketch_dim > 0 and sketch is not None, \
+        "deferred sign collection is the sketch-mode CD-GraB path"
+    assert cfg.balancer == "deterministic", \
+        "deferred exchange needs the deterministic balancer (Alweiss takes " \
+        "the per-step compressed exchange)"
+
+    g32 = jax.tree.map(lambda x: x.astype(jnp.float32), grads)
+    even = (state.t % 2) == 0
+
+    diffs = jax.tree.map(jnp.subtract, state.m_acc, g32)
+    zs = jax.vmap(sketch.apply)(diffs)                    # [W, k]
+    packed = pack_rows_int8(zs)                           # [W, k+4] int8
+    packed = jnp.where(even, jnp.zeros_like(packed), packed)
+
+    m_acc = jax.tree.map(lambda g, a: jnp.where(even, g, a),
+                         g32, state.m_acc)
+    return state._replace(m_acc=m_acc, t=state.t + 1), packed
 
 
 def expand_pair_signs(signs: np.ndarray) -> np.ndarray:

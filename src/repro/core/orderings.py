@@ -224,9 +224,35 @@ class ParallelGrabOrder(OrderPolicy):
                 "sigmas": self.sigmas.copy(), "pending": pending}
 
     def load_state_dict(self, d: dict) -> None:
-        self.sigmas = np.asarray(d["sigmas"], dtype=np.int64)
-        self.workers = int(d.get("workers", self.sigmas.shape[0]))
-        self.m = self.sigmas.shape[1]
+        """Restore (sigmas, pending) — validating against this loader's
+        (n, workers) first. A silently accepted mismatch corrupts
+        ``record_signs``' contiguous-shard arithmetic (``balanced // m``
+        maps units to the wrong owners) epochs later; fail at restore time
+        with the same actionable style as ``CheckpointManager.restore``."""
+        sigmas = np.asarray(d["sigmas"], dtype=np.int64)
+        workers = int(d.get("workers", sigmas.shape[0]))
+        if sigmas.ndim != 2 or sigmas.shape[0] != workers:
+            raise ValueError(
+                f"checkpoint order state has sigmas of shape "
+                f"{sigmas.shape} for workers={workers} (order-state/config "
+                f"mismatch — expected a [workers, m] per-worker "
+                f"permutation stack)")
+        if workers != self.workers:
+            raise ValueError(
+                f"checkpoint order state was written with workers="
+                f"{workers}, loader is configured for workers="
+                f"{self.workers} (order-state/config mismatch — e.g. a "
+                f"cd-grab run restored with a different --workers; resume "
+                f"with the original worker count or start a fresh order)")
+        if sigmas.size != self.n:
+            raise ValueError(
+                f"checkpoint order state permutes {sigmas.size} units, "
+                f"loader orders n={self.n} (order-state/config mismatch — "
+                f"e.g. a checkpoint from a different dataset or microbatch "
+                f"size; sigma must be a permutation of [0, {self.n}))")
+        self.sigmas = sigmas
+        self.workers = workers
+        self.m = sigmas.shape[1]
         pending = np.asarray(d.get("pending", []))
         self._pending = ([pending.reshape(-1, self.workers)]
                          if pending.size else [])

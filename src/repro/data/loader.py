@@ -62,7 +62,12 @@ class PermutedLoader:
           partial sign stream);
         * every ``q.put`` is bounded by a shutdown flag, so a consumer that
           abandons the generator mid-epoch (early break, its own exception)
-          unblocks the producer instead of deadlocking it on a full queue.
+          unblocks the producer instead of deadlocking it on a full queue;
+        * the consumer's ``q.get`` polls with a timeout and checks the
+          producer is still alive — a producer that dies without enqueueing
+          (interpreter teardown killing the daemon thread, a future refactor
+          dropping the exception hand-off) raises here instead of hanging
+          the training loop forever on an empty queue.
         """
         q: queue.Queue = queue.Queue(maxsize=self.prefetch)
         stop = object()
@@ -90,7 +95,22 @@ class PermutedLoader:
         t.start()
         try:
             while True:
-                item = q.get()
+                try:
+                    item = q.get(timeout=0.2)
+                except queue.Empty:
+                    if t.is_alive():
+                        continue
+                    # the producer can finish between our last get and the
+                    # liveness check — drain anything it managed to enqueue
+                    # before declaring it dead
+                    try:
+                        item = q.get_nowait()
+                    except queue.Empty:
+                        raise RuntimeError(
+                            f"PermutedLoader producer thread died without "
+                            f"delivering a result (epoch {epoch}, after "
+                            f"start_step {start_step}): the prefetch queue "
+                            f"is empty and the thread is gone") from None
                 if item is stop:
                     break
                 if isinstance(item, tuple) and item[0] is stop:

@@ -44,7 +44,7 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
              keep_hlo=False, n_micro=None, sketch_dim=0, use_grab=True,
              pad_heads=False, quant8=False, ordering=None,
              workers=None, cd_constraints=None, smoke=False,
-             sign_tol=SIGN_TOL) -> dict:
+             sign_wire="f32", sign_hier=0, sign_tol=SIGN_TOL) -> dict:
     """Lower + compile one cell; for cd-grab cells, hillclimb over the
     ``CD_GRAB_CANDIDATES`` explicit-constraint sets (compile each, keep the
     one with the fewest measured HLO collective bytes per device) and
@@ -69,7 +69,8 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
     try:
         kw = {"sketch_dim": sketch_dim, "use_grab": use_grab,
               "pad_heads": pad_heads, "quant8": quant8,
-              "ordering": ordering, "workers": workers, "smoke": smoke}
+              "ordering": ordering, "workers": workers, "smoke": smoke,
+              "sign_wire": sign_wire, "sign_hier": sign_hier}
         if n_micro is not None:
             kw["n_micro"] = n_micro
         cd_grab = ordering in ("cd-grab", "cd_grab", "cdgrab")
@@ -94,7 +95,8 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
             fp = None
             if meta.get("cd_grab"):
                 cg = meta["cd_grab"]
-                fp = (cg["n_workers"], cg["sketch_dim"], cg["group"])
+                fp = (cg["n_workers"], cg["sketch_dim"], cg["group"],
+                      cg.get("wire", "f32"))
             hc = analyze_hlo(hlo, n_dev, sign_fingerprint=fp)
             return {"cand": cand, "meta": meta, "compiled": compiled,
                     "hlo": hlo, "hc": hc, "t_lower": t_lower,
@@ -222,7 +224,9 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
                           f"update it if this holds on the production mesh")
             rec.update(sign_collective_terms(
                 n_workers=cg["n_workers"], sketch_dim=cg["sketch_dim"],
-                pair_steps=cg["pair_steps"], group=cg["group"]))
+                pair_steps=cg["pair_steps"], group=cg["group"],
+                wire=cg.get("wire", "f32"),
+                hier_group=cg.get("hier_group", 0)))
             rec.update(sign_collective_hlo_terms(hc.sign))
             delta = sign_collective_delta(
                 rec["sign_collective_bytes_per_dev"],
@@ -301,6 +305,13 @@ def main():
                          "hillclimbing over all candidates (cd-grab cells)")
     ap.add_argument("--smoke", action="store_true",
                     help="use the arch's SMOKE config (CI-scale cells)")
+    ap.add_argument("--sign-wire", choices=["f32", "int8"], default="f32",
+                    help="cd-grab sign-collective wire format: int8 packs "
+                         "the [W, k] rows to [W, k+4] int8 before the "
+                         "gather (and defers it to one batched collective "
+                         "per step); the analytic/HLO attribution follows")
+    ap.add_argument("--sign-hier", type=int, default=0,
+                    help="two-stage sign gather group size (0 = flat)")
     ap.add_argument("--smoke-mesh", default=None, metavar="DxM",
                     help="build a small DxM ('data' x 'model') mesh from the "
                          "forced host devices instead of the production mesh "
@@ -361,13 +372,18 @@ def main():
                            quant8=args.quant8, ordering=ordering,
                            workers=args.workers,
                            cd_constraints=args.cd_constraints,
-                           smoke=args.smoke)
+                           smoke=args.smoke, sign_wire=args.sign_wire,
+                           sign_hier=args.sign_hier)
             results.append(rec)
             tag = "multipod" if multi_pod else "singlepod"
             if args.smoke_mesh:
                 tag = f"smokemesh{args.smoke_mesh}"
             if ordering and ordering != "grab":
                 tag += "_" + ordering.replace("-", "")
+            if args.sign_wire != "f32":
+                tag += "_" + args.sign_wire
+            if args.sign_hier:
+                tag += f"_hier{args.sign_hier}"
             if args.tag:
                 tag += "_" + args.tag
             fname = os.path.join(args.out, f"{arch}_{shape}_{tag}.json")

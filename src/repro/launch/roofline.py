@@ -138,20 +138,50 @@ def _copy_coll(c: CollectiveStats) -> CollectiveStats:
                            dict(c.by_kind))
 
 
+def _match_sign_tensor(rtype: str, g: int, fp: Tuple) -> Optional[int]:
+    """First tensor in ``rtype`` matching the sign-collective fingerprint
+    ``fp = (W, k, group[, wire])``; returns its byte size or None.
+
+    f32 wire: an f32 tensor whose last dim is ``k`` and whose second-to-last
+    dim divides ``W`` (the full [W, k] gather, or a [W*L/g, k] stage of the
+    hierarchical exchange). int8 wire: an s8 tensor whose last dim is the
+    packed row width ``k + 4`` — covers the per-step [W, k+4], the deferred
+    [T, W, k+4] and the hierarchical stages. The op's own group size ``g``
+    must divide the fingerprint's total ``group`` (hier stages run on
+    subgroups). Only the FIRST matching tensor counts: a -start op's tuple
+    result repeats the operand and would double the bytes.
+    """
+    w, k, group = fp[0], fp[1], fp[2]
+    wire = fp[3] if len(fp) > 3 else "f32"
+    if g < 1 or group % g:
+        return None
+    want_dt = "s8" if wire == "int8" else "f32"
+    want_last = k + 4 if wire == "int8" else k
+    for dt, dims in _shape_dims(rtype):
+        if (dt == want_dt and len(dims) >= 2 and dims[-1] == want_last
+                and dims[-2] >= 1 and w % dims[-2] == 0):
+            n = 1
+            for d in dims:
+                n *= d
+            return n * _DTYPE_BYTES[dt]
+    return None
+
+
 def analyze_hlo(hlo_text: str, total_devices: int,
-                sign_fingerprint: Optional[Tuple[int, int, int]] = None) -> HloCost:
+                sign_fingerprint: Optional[Tuple] = None) -> HloCost:
     """Trip-count-aware FLOPs / HBM-bytes / collective analysis.
 
-    ``sign_fingerprint``: optional ``(W, k, group)`` — when given, every
-    all-gather whose result contains an f32[W, k] operand AND whose replica
-    groups have exactly ``group`` participants is additionally accumulated
+    ``sign_fingerprint``: optional ``(W, k, group)`` or ``(W, k, group,
+    wire)`` — when given, every all-gather matching
+    :func:`_match_sign_tensor` (the [W, k] f32 gather for ``wire="f32"``,
+    the packed [.., k+4] s8 gather for ``wire="int8"``; hierarchical stages
+    and the deferred batched gather included) is additionally accumulated
     into ``HloCost.sign`` (trip-count-folded like everything else). This
-    isolates CD-GraB's ``mesh_pair_signs`` gather from the gradient/FSDP
-    collectives so the analytic ``sign_collective_terms`` can be
-    cross-checked against the compiled HLO. The fingerprint is shape-based:
-    an unrelated all-gather of an f32[W, k] tensor over a same-sized group
-    would be counted too, so pick a sketch width that no parameter slab
-    shares (the dry-run cells do).
+    isolates CD-GraB's sign dataflow from the gradient/FSDP collectives so
+    the analytic ``sign_collective_terms`` can be cross-checked against the
+    compiled HLO. The fingerprint is shape-based: an unrelated all-gather
+    of a same-shaped tensor would be counted too, so pick a sketch width
+    that no parameter slab shares (the dry-run cells do).
     """
     # --- split into computations (headers at column 0 ending with '{') ----
     comps: Dict[str, List[str]] = {}
@@ -226,19 +256,15 @@ def analyze_hlo(hlo_text: str, total_devices: int,
                 cost.coll.raw_bytes += raw
                 cost.coll.count += 1
                 cost.coll.by_kind[base] = cost.coll.by_kind.get(base, 0.0) + moved
-                if (sign_fingerprint is not None and base == "all-gather"
-                        and g == sign_fingerprint[2]
-                        and any(dt == "f32" and dims == list(sign_fingerprint[:2])
-                                for dt, dims in _shape_dims(rtype))):
-                    # count only the [W, k] operand's bytes (a -start op's
-                    # tuple result would double the fingerprinted tensor)
-                    srb = sign_fingerprint[0] * sign_fingerprint[1] * 4
-                    smoved = srb * _ring_factor(base, g)
-                    cost.sign.bytes_moved += smoved
-                    cost.sign.raw_bytes += srb
-                    cost.sign.count += 1
-                    cost.sign.by_kind[base] = \
-                        cost.sign.by_kind.get(base, 0.0) + smoved
+                if sign_fingerprint is not None and base == "all-gather":
+                    srb = _match_sign_tensor(rtype, g, sign_fingerprint)
+                    if srb is not None:
+                        smoved = srb * _ring_factor(base, g)
+                        cost.sign.bytes_moved += smoved
+                        cost.sign.raw_bytes += srb
+                        cost.sign.count += 1
+                        cost.sign.by_kind[base] = \
+                            cost.sign.by_kind.get(base, 0.0) + smoved
 
             # ---- HBM bytes: result + operands of non-free top-level ops --
             if opcode not in _FREE_OPS:
@@ -311,29 +337,60 @@ def roofline_terms(flops: float, bytes_accessed: float,
 
 
 def sign_collective_terms(n_workers: int, sketch_dim: int, pair_steps: int,
-                          group: int, dtype_bytes: int = 4) -> dict:
-    """Roofline terms for CD-GraB's per-step sign dataflow.
+                          group: int, dtype_bytes: int = 4,
+                          wire: str = "f32", hier_group: int = 0,
+                          deferred: Optional[bool] = None) -> dict:
+    """Roofline terms for CD-GraB's sign dataflow, wire-format aware.
 
-    Each ``mesh_pair_signs`` invocation all-gathers the [W, sketch_dim] f32
-    block over the ``group``-sized data axis (ring factor (g-1)/g on the
-    gathered result) and replays the scan replicated — no further traffic.
-    The train step invokes it once per microbatch timestep (``pair_steps`` =
-    n_micro / W; the stash/balance select evaluates both branches), so the
-    per-device, per-step cost is:
+    ``wire="f32"`` (exact): the train step invokes ``mesh_pair_signs`` once
+    per microbatch timestep (``pair_steps`` = n_micro / W; the stash/balance
+    select evaluates both branches), each all-gathering the [W, sketch_dim]
+    f32 block over the ``group``-sized data axis — ring factor (g-1)/g on
+    the gathered result:
 
       bytes = pair_steps * W * sketch_dim * 4 * (g-1)/g
-      s     = bytes / ICI_BW        (unoverlapped upper bound)
+
+    ``wire="int8"``: each row packs to sketch_dim + 4 int8 lanes (values +
+    in-band scale — ``optim.compression.pack_rows_int8``), ~4x fewer bytes.
+    ``deferred`` (default: the int8 wire's mesh path, which batches the
+    exchange for the deterministic balancer) collapses the per-timestep
+    gathers into ONE [pair_steps, W, k+4] gather per optimizer step —
+    identical bytes on the wire, 1 collective instead of ``pair_steps``.
+
+    ``hier_group=L`` (two-stage exchange): stage 1 gathers within L-sized
+    groups (moved = R*(L-1)/g of the full result R), stage 2 exchanges the
+    group blocks across the g/L hosts (moved = R*(H-1)/H) — two collectives
+    per exchange, and the cross-host stage carries all the (g-1)/g ≈ 1
+    bytes only when H ≈ g.
 
     These are *analytic* terms, kept separate from the HLO-parsed collective
     totals so the sign overhead is attributable: compare
     ``sign_collective_s`` against ``collective_s`` (gradient all-reduces
     dominate) to see that coordination rides for free.
     """
-    rb = n_workers * sketch_dim * dtype_bytes
-    moved = rb * _ring_factor("all-gather", group) * pair_steps
+    if deferred is None:
+        deferred = wire == "int8"
+    if wire == "int8":
+        row_bytes = (sketch_dim + 4) * 1           # packed s8 lanes
+    else:
+        row_bytes = sketch_dim * dtype_bytes
+    n_exchanges = 1 if deferred else pair_steps
+    # full gathered result per exchange (deferred batches all timesteps)
+    rb = (pair_steps * n_workers * row_bytes if deferred
+          else n_workers * row_bytes)
+    g = group
+    if hier_group in (0, 1, g):
+        moved_per = rb * _ring_factor("all-gather", g)
+        colls_per = 1
+    else:
+        hosts = g // hier_group
+        moved_per = rb * ((hier_group - 1) / g
+                          + _ring_factor("all-gather", hosts))
+        colls_per = 2
+    moved = moved_per * n_exchanges
     return {
         "sign_collective_bytes_per_dev": moved,
-        "sign_collective_count": pair_steps,
+        "sign_collective_count": n_exchanges * colls_per,
         "sign_collective_s": moved / ICI_BW,
     }
 

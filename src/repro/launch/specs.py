@@ -89,7 +89,8 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
               sketch_dim: int = 0, pad_heads: bool = False,
               quant8: bool = False, ordering: Optional[str] = None,
               workers: Optional[int] = None,
-              cd_constraints: Optional[str] = None, smoke: bool = False):
+              cd_constraints: Optional[str] = None, smoke: bool = False,
+              sign_wire: str = "f32", sign_hier: int = 0):
     """Build one (arch x shape) cell. ``ordering`` picks the data-ordering
     subsystem for train cells: "grab" (default, single-stream Algorithm 4),
     "cd-grab" (mesh-native CD-GraB: W workers sharded over the data axis,
@@ -105,6 +106,11 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
     propagation). The dry-run compiles every candidate and keeps the one
     with the fewest measured HLO collective bytes. ``smoke`` swaps in the
     arch's SMOKE config (test/CI-scale cells on small CPU meshes).
+
+    ``sign_wire`` selects the cd-grab coordination wire format ("f32" exact
+    / "int8" packed — see ``core.distributed``); ``sign_hier`` the two-stage
+    gather group size. Both land in ``meta["cd_grab"]`` so the dry-run's
+    analytic/HLO sign attribution models the same wire the cell compiled.
     """
     policy = policy or ShardPolicy()
     full_cfg, smoke_cfg = get_config(arch)
@@ -151,7 +157,8 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
             if n_micro is None:
                 n_micro = 2 * n_workers      # T=2 pair timesteps per step
             assert n_micro % n_workers == 0, (n_micro, n_workers)
-            grab_cfg = GrabConfig(pair_balance=True, sketch_dim=k_dim)
+            grab_cfg = GrabConfig(pair_balance=True, sketch_dim=k_dim,
+                                  sign_wire=sign_wire, sign_hier=sign_hier)
             sketch = make_sketch(params_abs, k_dim)
         elif ordering == "grab":
             grab_cfg = GrabConfig(sketch_dim=min(sketch_dim, n_params))
@@ -226,6 +233,8 @@ def make_cell(arch: str, shape_name: str, mesh, policy: Optional[ShardPolicy] = 
                 "pair_steps": n_micro // n_workers,
                 "group": mesh.shape.get("data", 1),
                 "constraints": cand,
+                "wire": sign_wire,
+                "hier_group": sign_hier,
             }
         return (step_fn, (state_abs, batch_abs), (s_specs, b_specs), (0,), meta)
 

@@ -1,3 +1,5 @@
 from repro.optim.optimizers import OptState, adamw, sgdm, make_optimizer
 from repro.optim.schedules import constant, cosine, wsd
-from repro.optim.compression import ef_int8_compress, ef_int8_decompress
+from repro.optim.compression import (ef_int8_compress, ef_int8_decompress,
+                                     int8_scales, pack_rows_int8,
+                                     quantize_rows_int8, unpack_rows_int8)

@@ -47,6 +47,13 @@ class LoopConfig:
     n_micro: int = 8              # microbatches per optimizer step
     ordering: str = "grab"        # grab | cd-grab | rr | so | flipflop
     workers: int = 1              # cd-grab only: W logical DP workers
+    sign_wire: str = "f32"        # cd-grab coordination wire: "f32" | "int8"
+    #                               (int8 packs the [W, k] rows to [W, k+4]
+    #                               int8 before the gather — ~4x fewer bytes,
+    #                               same signs on every shard; on the mesh
+    #                               path it also defers the exchange to one
+    #                               overlappable gather per step)
+    sign_hier: int = 0            # two-stage gather group size (0 = flat)
     ckpt_dir: Optional[str] = None
     ckpt_every_steps: int = 0     # 0 = once per epoch
     keep_ckpts: int = 3
@@ -88,6 +95,15 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
     if cd_grab:
         if not grab_cfg.pair_balance:
             grab_cfg = dataclasses.replace(grab_cfg, pair_balance=True)
+        # loop-level sign-wire knobs override the GrabConfig defaults only
+        # when explicitly set, so callers passing a pre-configured grab_cfg
+        # keep their choice
+        if loop_cfg.sign_wire != "f32":
+            grab_cfg = dataclasses.replace(grab_cfg,
+                                           sign_wire=loop_cfg.sign_wire)
+        if loop_cfg.sign_hier:
+            grab_cfg = dataclasses.replace(grab_cfg,
+                                           sign_hier=loop_cfg.sign_hier)
         assert loop_cfg.n_micro % n_workers == 0, \
             (loop_cfg.n_micro, n_workers)
         assert (n_micro_total // n_workers) % 2 == 0, \

@@ -28,8 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grab import (GrabConfig, Sketch, grab_step, grab_step_workers,
-                             init_grab_state, init_parallel_grab_state,
-                             init_sign_buffer)
+                             grab_step_workers_collect, init_grab_state,
+                             init_parallel_grab_state, init_sign_buffer)
 from repro.optim.optimizers import Optimizer
 from repro.train.state import TrainState
 from repro.utils.tree import tree_zeros_like
@@ -84,7 +84,11 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
     host-simulated gathered scan (bit-identical results; the mesh form is
     what the SPMD partitioner lowers onto the hardware). Only meaningful
     with ``n_workers > 1``; ``data_axis`` names the mesh axis the worker
-    rows shard over.
+    rows shard over. With ``grab_cfg.sign_wire == "int8"`` and the
+    deterministic balancer, the mesh path defers the exchange: the scan
+    stashes packed int8 rows and ONE gather + replicated scan per optimizer
+    step runs outside it (``distributed.mesh_deferred_pair_signs``),
+    overlapping the wire with the epilogue — same signs, bit-identical.
 
     ``constrain_grads``: optional tree->tree applying param PartitionSpecs
     (with_sharding_constraint) to gradient-shaped pytrees. Without it, XLA's
@@ -107,6 +111,17 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
     if n_workers > 1:
         assert grab_cfg is not None and grab_cfg.pair_balance, \
             "multi-worker ordering is the CD-GraB pair-balance mode"
+    # Deferred compressed exchange (compute overlap): with the int8 wire +
+    # deterministic balancer on a mesh, the microbatch scan only *stashes*
+    # each timestep's packed rows; ONE gather + replicated scan runs after
+    # the scan (mesh_deferred_pair_signs), where XLA overlaps it with the
+    # gradient-mean/optimizer epilogue instead of serializing one collective
+    # into every scan iteration. Alweiss keeps the per-step compressed
+    # exchange (its PRNG stream is per-timestep), as does the host path.
+    deferred = (n_workers > 1 and mesh is not None and grab_cfg is not None
+                and grab_cfg.sign_wire == "int8"
+                and grab_cfg.balancer == "deterministic"
+                and grab_cfg.sketch_dim > 0)
 
     def pin_grab(gs):
         if gs is None or grab_cfg is None:
@@ -155,8 +170,41 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
             acc = pin(jax.tree.map(jnp.add, acc, gmean))
             return (acc, grab_state), (losses.mean(), eps)
 
+        def micro_workers_collect(carry, mb_w):
+            # deferred-exchange body: identical compute, but the sign
+            # dataflow only stashes this timestep's packed int8 row — no
+            # collective inside the scan
+            acc, grab_state = carry
+            if cdc.slab is not None:
+                mb_w = cdc.slab(mb_w)
+            (losses, metrics), grads = jax.vmap(
+                grad_fn, in_axes=(None, 0))(params, mb_w)
+            if cdc.grads is not None:
+                grads = cdc.grads(grads)
+            grab_state, packed = grab_step_workers_collect(
+                grab_state, grads, grab_cfg, sketch)
+            grab_state = pin_grab(grab_state)
+            gmean = pin(jax.tree.map(
+                lambda g: g.astype(jnp.float32).mean(axis=0), grads))
+            acc = pin(jax.tree.map(jnp.add, acc, gmean))
+            return (acc, grab_state), (losses.mean(), packed)
+
         acc0 = pin(tree_zeros_like(params, jnp.float32))
-        if n_workers > 1:
+        if n_workers > 1 and deferred:
+            from repro.core.distributed import mesh_deferred_pair_signs
+            batch_w = jax.tree.map(
+                lambda x: x.reshape((x.shape[0] // n_workers, n_workers)
+                                    + x.shape[1:]), batch)
+            (acc, grab_state), (losses, packed) = jax.lax.scan(
+                micro_workers_collect, (acc0, pin_grab(state.grab)), batch_w)
+            # one batched exchange for the whole step's [T, W, k+4] stash;
+            # independent of the grad-mean/optimizer chain below, so the
+            # compiler overlaps the gather with the epilogue
+            new_s, signs = mesh_deferred_pair_signs(
+                grab_state.s, packed, state.grab.t, mesh, data_axis,
+                hier_group=grab_cfg.sign_hier)
+            grab_state = grab_state._replace(s=new_s)
+        elif n_workers > 1:
             batch_w = jax.tree.map(
                 lambda x: x.reshape((x.shape[0] // n_workers, n_workers)
                                     + x.shape[1:]), batch)

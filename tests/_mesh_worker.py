@@ -102,6 +102,34 @@ def main(n_dev: int) -> dict:
                                      and replicated_identically(s_al))
     out["alweiss_signs"] = np.asarray(signs_al).tolist()
 
+    # --- int8 compressed wire: quantize-before-gather determinism ---------
+    # the packed bytes are computed on the owning shard *before* the gather,
+    # so every replica scans identical dequantized rows — bit-identity vs
+    # the host scan on the same quantized wire is the whole contract.
+    s_i8, signs_i8 = mesh_pair_signs(s_rep, z_sh, mesh, wire="int8")
+    s_i8_h, signs_i8_h = coordinated_pair_signs(s0, zs, impl="xla",
+                                                wire="int8")
+    out["int8_bitmatch"] = bool(
+        np.array_equal(np.asarray(signs_i8), np.asarray(signs_i8_h))
+        and np.array_equal(np.asarray(s_i8), np.asarray(s_i8_h)))
+    out["int8_replicated"] = bool(replicated_identically(signs_i8)
+                                  and replicated_identically(s_i8))
+    out["int8_signs"] = np.asarray(signs_i8).tolist()
+    out["int8_s"] = [float(x) for x in np.asarray(s_i8)]
+
+    # --- hierarchical two-stage gather == flat gather, both wires ---------
+    hier_ok = True
+    for hg in (h for h in (2, 4) if n_dev % h == 0 and h <= n_dev):
+        s_hf, signs_hf = mesh_pair_signs(s_rep, z_sh, mesh, hier_group=hg)
+        s_h8, signs_h8 = mesh_pair_signs(s_rep, z_sh, mesh, wire="int8",
+                                         hier_group=hg)
+        hier_ok = hier_ok and bool(
+            np.array_equal(np.asarray(signs_hf), np.asarray(signs_mesh))
+            and np.array_equal(np.asarray(s_hf), np.asarray(s_mesh))
+            and np.array_equal(np.asarray(signs_h8), np.asarray(signs_i8))
+            and np.array_equal(np.asarray(s_h8), np.asarray(s_i8)))
+    out["hier_bitmatch"] = hier_ok
+
     # --- full device step: grab_step_workers(mesh=...) vs host path -------
     cfg = GrabConfig(pair_balance=True, sketch_dim=STEP_SKETCH)
     tmpl = {"g": jnp.zeros((STEP_DIM,), jnp.float32)}
@@ -120,6 +148,33 @@ def main(n_dev: int) -> dict:
     out["step_bitmatch"] = ok
     out["step_signs"] = step_eps
 
+    # --- deferred exchange == per-step exchange on the int8 wire ----------
+    # grab_step_workers_collect stashes packed rows per microbatch; ONE
+    # gather + replicated scan afterwards must reproduce the per-step
+    # exchange bit-for-bit (same quantized rows, same scan order).
+    from repro.core.distributed import mesh_deferred_pair_signs
+    from repro.core.grab import grab_step_workers_collect
+
+    cfg8 = GrabConfig(pair_balance=True, sketch_dim=STEP_SKETCH,
+                      sign_wire="int8")
+    st_p = init_parallel_grab_state(tmpl, cfg8, W)
+    st_d = init_parallel_grab_state(tmpl, cfg8, W)
+    s0_run = jnp.asarray(np.asarray(st_d.s))
+    eps_ps, packed = [], []
+    for t in range(STEP_T):
+        g = {"g": jnp.asarray(gs_np[t])}
+        st_p, ep = grab_step_workers(st_p, g, cfg8, sketch)
+        eps_ps.append(np.asarray(ep))
+        st_d, pk = grab_step_workers_collect(st_d, g, cfg8, sketch)
+        packed.append(pk)
+    s_def, eps_def = mesh_deferred_pair_signs(s0_run, jnp.stack(packed),
+                                              jnp.int32(0), mesh)
+    out["deferred_bitmatch"] = bool(
+        np.array_equal(np.asarray(eps_def), np.stack(eps_ps))
+        and np.array_equal(np.asarray(s_def), np.asarray(st_p.s)))
+    out["deferred_replicated"] = bool(replicated_identically(eps_def)
+                                      and replicated_identically(s_def))
+
     # --- cd-grab dry-run cell: constraint hillclimb + analytic-vs-HLO ----
     # Imported only now: jax is already initialized, so the module-level
     # forced-device-count flag append in launch.dryrun is inert.
@@ -137,6 +192,19 @@ def main(n_dev: int) -> dict:
         "sign_collective_bytes_per_dev_hlo", "sign_collective_count_hlo",
         "sign_collective_s_hlo", "sign_collective_delta")}
     out["dryrun"]["cd_grab"] = rec.get("cd_grab")
+
+    # --- int8 dry-run cell: compressed-wire collective attribution --------
+    # constraints pinned to "slab" (skips the hillclimb re-run; the sign
+    # collective bytes don't depend on the constraint set anyway) so the
+    # parent can check bytes ratio vs the f32 cell + analytic-vs-HLO delta.
+    rec8 = run_cell(DRYRUN_ARCH, DRYRUN_SHAPE, cell_mesh, ordering="cd-grab",
+                    sketch_dim=DRYRUN_SKETCH, smoke=True, verbose=False,
+                    cd_constraints="slab", sign_wire="int8")
+    out["dryrun_int8"] = {k: rec8.get(k) for k in (
+        "status", "reason",
+        "sign_collective_bytes_per_dev", "sign_collective_count",
+        "sign_collective_bytes_per_dev_hlo", "sign_collective_count_hlo",
+        "sign_collective_delta")}
     return out
 
 

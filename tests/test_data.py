@@ -94,6 +94,30 @@ def test_loader_surfaces_mid_epoch_exception_after_good_steps():
     assert len(seen) < 8                      # truncated *with* an error
 
 
+def test_loader_dead_producer_raises_instead_of_hanging(monkeypatch):
+    """A producer thread that dies without enqueueing anything (interpreter
+    teardown, a refactor dropping the exception hand-off) must surface as a
+    RuntimeError in the consumer — the old bare ``q.get()`` hung the
+    training loop forever on the empty queue."""
+    import repro.data.loader as loader_mod
+
+    class DeadThread:
+        def __init__(self, target=None, daemon=None):
+            pass
+
+        def start(self):
+            pass
+
+        def is_alive(self):
+            return False
+
+    monkeypatch.setattr(loader_mod.threading, "Thread", DeadThread)
+    ds = SyntheticTextDataset(32, 8, 64, seed=0)
+    loader = PermutedLoader(ds, make_policy("so", 8, seed=0), 4)
+    with pytest.raises(RuntimeError, match="producer thread died"):
+        list(loader.epoch(0))
+
+
 def test_loader_abandoned_consumer_unblocks_producer():
     """Breaking out of the epoch mid-way (consumer exception, early stop)
     must not leave the producer thread blocked forever on a full queue."""

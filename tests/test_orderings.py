@@ -56,3 +56,33 @@ def test_grab_policy_state_roundtrip(n, seed):
     q.load_state_dict(state)
     assert np.array_equal(p.epoch_order(1), q.epoch_order(1))
     assert sorted(p.epoch_order(1).tolist()) == list(range(n))
+
+
+def test_cd_grab_state_roundtrip_matching_config():
+    p = make_policy("cd-grab", 32, 5, workers=4)
+    p.record_signs(0, np.random.default_rng(0).choice([-1, 1], size=32))
+    q = make_policy("cd-grab", 32, 9, workers=4)
+    q.load_state_dict(p.state_dict())
+    assert np.array_equal(p.epoch_order(1), q.epoch_order(1))
+
+
+def test_cd_grab_restore_rejects_worker_count_mismatch():
+    """A checkpoint written with a different --workers must fail at restore
+    time, not corrupt the contiguous-shard arithmetic epochs later."""
+    state = make_policy("cd-grab", 32, 0, workers=4).state_dict()
+    q = make_policy("cd-grab", 32, 0, workers=2)
+    with pytest.raises(ValueError, match="order-state/config mismatch"):
+        q.load_state_dict(state)
+
+
+def test_cd_grab_restore_rejects_dataset_size_mismatch():
+    state = make_policy("cd-grab", 64, 0, workers=4).state_dict()
+    q = make_policy("cd-grab", 32, 0, workers=4)
+    with pytest.raises(ValueError, match="order-state/config mismatch"):
+        q.load_state_dict(state)
+
+
+def test_cd_grab_restore_rejects_malformed_sigmas():
+    q = make_policy("cd-grab", 32, 0, workers=4)
+    with pytest.raises(ValueError, match="order-state/config mismatch"):
+        q.load_state_dict({"sigmas": np.arange(32), "workers": 4})

@@ -129,3 +129,78 @@ def test_int8_error_feedback_compression():
     assert resid <= 2 * scale * 127  # residual bounded by quantization range
     np.testing.assert_allclose(acc_q + np.asarray(residual["w"]), acc_true,
                                rtol=1e-4, atol=1e-4)
+
+
+def test_int8_compress_psum_decompress_with_shared_scales():
+    """The documented cross-rank recipe: compress with max-reduced scales,
+    integer-psum, decompress by the shared scale / n_ranks. Ranks see wildly
+    different magnitudes — exactly the case rank-local scales corrupt (the
+    sum of integers quantized in different units has no unit)."""
+    from repro.optim.compression import ef_int8_compress, ef_int8_decompress
+
+    R = 4
+    rng = np.random.default_rng(3)
+    mags = np.array([0.01, 1.0, 10.0, 100.0])[:, None]
+    gs = {"w": jnp.asarray(rng.normal(size=(R, 64)) * mags, jnp.float32)}
+    res = {"w": jnp.zeros((R, 64), jnp.float32)}
+
+    def rank(g, r):
+        q, s, new_r = ef_int8_compress(g, r, axis_name="pod")
+        q_sum = jax.tree.map(lambda x: jax.lax.psum(x, "pod"), q)
+        return ef_int8_decompress(q_sum, s, R), s, new_r
+
+    recon, scales, _ = jax.vmap(rank, axis_name="pod")(gs, res)
+    recon, scales = np.asarray(recon["w"]), np.asarray(scales["w"])
+    # the pmax made every rank quantize in the same unit ...
+    assert np.all(scales == scales[0])
+    # ... so every rank reconstructs the same mean, within the quantization
+    # bound: per-rank elementwise error <= scale/2, averaged over R ranks
+    assert np.all(recon == recon[0])
+    true_mean = np.mean(np.asarray(gs["w"]), axis=0)
+    np.testing.assert_allclose(recon[0], true_mean,
+                               atol=float(scales[0]) / 2 + 1e-6)
+
+
+def test_int8_compress_preserves_tuple_bearing_pytrees():
+    """Gradient pytrees with interior tuple nodes must round-trip with their
+    structure intact — the per-leaf (q, scale, residual) unzip goes through
+    the treedef, not a tuple-type leaf predicate (which would stop descent
+    at the interior tuple and corrupt all three outputs)."""
+    from repro.optim.compression import ef_int8_compress, ef_int8_decompress
+
+    g = {"a": (jnp.linspace(-1.0, 1.0, 8), jnp.full((4,), 2.0)),
+         "b": {"c": jnp.full((3,), -3.0)}}
+    r = jax.tree.map(jnp.zeros_like, g)
+    q, s, new_r = ef_int8_compress(g, r)
+    want = jax.tree_util.tree_structure(g)
+    for out in (q, s, new_r):
+        assert jax.tree_util.tree_structure(out) == want
+    assert all(x.dtype == jnp.int8 for x in jax.tree.leaves(q))
+    deq = ef_int8_decompress(q, s)
+    for d, orig, scale in zip(jax.tree.leaves(deq), jax.tree.leaves(g),
+                              jax.tree.leaves(s)):
+        np.testing.assert_allclose(np.asarray(d), np.asarray(orig),
+                                   atol=float(scale) / 2 + 1e-7)
+
+
+def test_sign_wire_pack_unpack_roundtrip():
+    """The [k] -> [k+4] packed row format: dequantization error <= scale/2
+    per element, all-zero rows survive exactly, and the scale rides in-band
+    as its own raw bytes (pure function of the wire -> replicated consumers
+    derive identical values)."""
+    from repro.optim.compression import (SCALE_BYTES, pack_rows_int8,
+                                         quantize_rows_int8, unpack_rows_int8)
+
+    rng = np.random.default_rng(7)
+    rows = np.asarray(rng.normal(size=(6, 33)) * 50, np.float32)
+    rows[2] = 0.0                              # stash row: must stay zero
+    packed = pack_rows_int8(jnp.asarray(rows))
+    assert packed.shape == (6, 33 + SCALE_BYTES) and packed.dtype == jnp.int8
+    out = np.asarray(unpack_rows_int8(packed))
+    _, scale = quantize_rows_int8(jnp.asarray(rows))
+    err = np.abs(out - rows)
+    assert np.all(err <= np.asarray(scale)[:, None] / 2 + 1e-7)
+    assert np.all(out[2] == 0.0)
+    # unpack is deterministic in the bytes alone
+    again = np.asarray(unpack_rows_int8(jnp.asarray(np.asarray(packed))))
+    assert np.array_equal(out, again)
