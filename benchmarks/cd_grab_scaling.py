@@ -44,7 +44,6 @@ trajectory is recorded per commit.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -356,20 +355,20 @@ def main(argv=None):
         print(f"{kind},{w},{epoch},{'' if v is None else f'{v:.5f}'}")
 
     if args.json:
-        rec = {
-            "bench": "cd_grab_scaling",
-            "unix_time": time.time(),
-            "config": {"n": args.n, "d": args.d, "epochs": args.epochs,
-                       "workers": list(args.workers), "seed": args.seed,
-                       "wallclock_d": args.wallclock_d,
-                       "loop_epochs": args.loop_epochs,
-                       "wire_k": args.wire_k,
-                       "devices": jax.device_count()},
-            "rows": [list(r) for r in rows],
-        }
-        with open(args.json, "w") as f:
-            json.dump(rec, f, indent=1)
-        print(f"[bench] wrote {args.json}")
+        from benchmarks.common import make_bench_record, write_bench_json
+        rec = make_bench_record(
+            "cd_grab_scaling",
+            {"n": args.n, "d": args.d, "epochs": args.epochs,
+             "workers": list(args.workers), "seed": args.seed,
+             "wallclock_d": args.wallclock_d,
+             "loop_epochs": args.loop_epochs,
+             "wire_k": args.wire_k,
+             "devices": jax.device_count()},
+            rows)
+        rec["unix_time"] = rec["time_unix"]      # pre-schema field, kept for
+        #                                          old trend-table tooling
+        write_bench_json(args.json, rec)
+        print(f"[bench] wrote {args.json} (schema {rec['schema']})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,189 @@
+"""CI regression gate: validate run-log/benchmark schemas and fail on
+ordering-quality or step-time regressions against the committed baseline.
+
+    python benchmarks/check_regression.py \
+        --current BENCH_cd_grab.json --baseline BENCH_baseline.json \
+        [--metrics run_metrics.jsonl] [--herding-tol 0.2] [--step-tol 0.2]
+
+Three checks, each with an actionable failure message:
+
+1. **Schema** — ``--metrics`` (the smoke run's JSONL log) must be
+   schema-valid line by line (``repro.obs.schema``) and carry the records a
+   healthy instrumented run always emits: one ``run_meta``, ≥1 ``epoch``
+   (with step-timer quantiles), ≥1 ``quality``. The benchmark JSONs are
+   validated too when they carry the schema envelope (pre-schema baselines
+   are grandfathered).
+2. **Herding bound** — per (row kind, W): the *final-epoch* herding bound
+   of the current sweep must not exceed baseline × (1 + ``--herding-tol``).
+   The sweep is seeded and deterministic on CPU, so a >20% move is a real
+   ordering-quality regression, not noise.
+3. **Step time** — compared through *box-speed-normalized ratios*, because
+   the committed baseline and the CI runner are different machines:
+   ``wallclock_sign_frac`` (sign dataflow share of the device step) must
+   not grow past baseline × (1 + tol), and ``wallclock_loop_speedup``
+   (sync/async epoch ratio) must not shrink below baseline × (1 − tol).
+   Absolute µs rows are compared only under ``--absolute`` (same-box
+   trending).
+
+Exit 0 on pass, 1 on any failure (CI fails the job), 2 on unusable inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.schema import (SchemaError, read_jsonl, records_of_kind,
+                              validate_record)
+
+# row kinds where LOWER is better / HIGHER is better, compared as ratios
+LOWER_BETTER = ("herding",)
+FRAC_LOWER_BETTER = ("wallclock_sign_frac",)
+RATIO_HIGHER_BETTER = ("wallclock_loop_speedup",)
+ABSOLUTE_LOWER_BETTER = ("wallclock_step_us", "wallclock_sign_us",
+                         "wallclock_loop_sync_s", "wallclock_loop_async_s")
+
+
+def load_bench(path: str) -> dict:
+    """Load a benchmark JSON; validate its schema when it carries the
+    envelope (pre-schema baselines without a ``schema`` field pass)."""
+    with open(path) as f:
+        rec = json.load(f)
+    if not isinstance(rec, dict) or "rows" not in rec:
+        raise SchemaError(f"{path}: not a benchmark record (no 'rows')")
+    if "schema" in rec:
+        validate_record(rec)
+    return rec
+
+
+def index_rows(rec: dict) -> dict:
+    """rows [[kind, W, epoch, value], ...] -> {(kind, W, epoch): value}."""
+    out = {}
+    for kind, w, epoch, value in rec["rows"]:
+        out[(kind, int(w), int(epoch))] = value
+    return out
+
+
+def final_epoch_values(idx: dict, kind: str) -> dict:
+    """{W: value at that W's max epoch} for one row kind."""
+    best = {}
+    for (k, w, epoch), v in idx.items():
+        if k != kind or v is None:
+            continue
+        if w not in best or epoch > best[w][0]:
+            best[w] = (epoch, v)
+    return {w: v for w, (_, v) in best.items()}
+
+
+def check_metrics_log(path: str) -> list:
+    """Schema-validate the run log and require the records an instrumented
+    run always produces. Returns a list of failure strings."""
+    fails = []
+    try:
+        records = read_jsonl(path)
+    except SchemaError as e:
+        return [f"metrics log invalid: {e}"]
+    if not records:
+        return [f"metrics log {path} is empty"]
+    meta = records_of_kind(records, "run_meta")
+    epochs = records_of_kind(records, "epoch")
+    quality = records_of_kind(records, "quality")
+    if len(meta) != 1:
+        fails.append(f"expected exactly 1 run_meta record, got {len(meta)}")
+    if not epochs:
+        fails.append("no 'epoch' records: the loop emitted no per-epoch "
+                     "timer summaries")
+    for rec in epochs:
+        timers = rec.get("timers", {})
+        if "phase.step" not in timers:
+            fails.append(f"epoch {rec.get('epoch')} record has no "
+                         f"'phase.step' timer (per-step quantiles missing)")
+            break
+        for q in ("p50_s", "p95_s", "p99_s"):
+            if q not in timers["phase.step"]:
+                fails.append(f"phase.step timer missing quantile {q}")
+    if not quality:
+        fails.append("no 'quality' records: per-epoch ordering-quality "
+                     "metrics missing (GraB runs must emit one per epoch)")
+    return fails
+
+
+def compare(current: dict, baseline: dict, herding_tol: float,
+            step_tol: float, absolute: bool) -> list:
+    cur, base = index_rows(current), index_rows(baseline)
+    fails = []
+
+    def ratio_check(kinds, tol, worse_is_higher, label):
+        for kind in kinds:
+            cur_v = final_epoch_values(cur, kind)
+            base_v = final_epoch_values(base, kind)
+            for w in sorted(set(cur_v) & set(base_v)):
+                c, b = cur_v[w], base_v[w]
+                if b == 0:
+                    continue
+                if worse_is_higher:
+                    bad = c > b * (1.0 + tol)
+                    direction = "rose"
+                else:
+                    bad = c < b * (1.0 - tol)
+                    direction = "fell"
+                if bad:
+                    fails.append(
+                        f"{label}: {kind} (W={w}) {direction} "
+                        f"{abs(c / b - 1.0) * 100.0:.1f}% past the "
+                        f"{tol * 100:.0f}% gate (current {c:.6g} vs "
+                        f"baseline {b:.6g})")
+
+    ratio_check(LOWER_BETTER, herding_tol, True, "herding-bound regression")
+    ratio_check(FRAC_LOWER_BETTER, step_tol, True, "step-time regression")
+    ratio_check(RATIO_HIGHER_BETTER, step_tol, False, "step-time regression")
+    if absolute:
+        ratio_check(ABSOLUTE_LOWER_BETTER, step_tol, True,
+                    "step-time regression (absolute)")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True,
+                    help="this run's benchmark JSON (e.g. the fresh "
+                         "BENCH_cd_grab.json)")
+    ap.add_argument("--baseline", required=True,
+                    help="the committed baseline benchmark JSON")
+    ap.add_argument("--metrics", default=None,
+                    help="a run-log JSONL to schema-validate (the smoke "
+                         "run's --metrics-out file)")
+    ap.add_argument("--herding-tol", type=float, default=0.20)
+    ap.add_argument("--step-tol", type=float, default=0.20)
+    ap.add_argument("--absolute", action="store_true",
+                    help="also gate absolute µs/s rows (same-box trending "
+                         "only — cross-machine absolutes are meaningless)")
+    args = ap.parse_args(argv)
+
+    try:
+        current = load_bench(args.current)
+        baseline = load_bench(args.baseline)
+    except (OSError, json.JSONDecodeError, SchemaError) as e:
+        print(f"[check_regression] cannot load inputs: {e}", file=sys.stderr)
+        return 2
+
+    fails = []
+    if args.metrics:
+        fails += check_metrics_log(args.metrics)
+    fails += compare(current, baseline, args.herding_tol, args.step_tol,
+                     args.absolute)
+
+    if fails:
+        for f in fails:
+            print(f"[check_regression] FAIL: {f}", file=sys.stderr)
+        print(f"[check_regression] {len(fails)} failure(s)", file=sys.stderr)
+        return 1
+    n_rows = len(current["rows"])
+    print(f"[check_regression] PASS: {n_rows} current rows vs baseline"
+          + (f", metrics log {args.metrics} schema-valid" if args.metrics
+             else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,37 @@
-"""Shared benchmark helpers: timing + the synthetic stand-ins for the paper's
+"""Shared benchmark helpers: timing, the synthetic stand-ins for the paper's
 datasets (offline container: MNIST/CIFAR10/WikiText are replaced by
-structurally-equivalent synthetic data; see DESIGN.md §8)."""
+structurally-equivalent synthetic data; see DESIGN.md §8), and the
+schema-shared benchmark record builder.
+
+Benchmark JSONs and live-run JSONL logs speak the same schema
+(``repro.obs.schema``): :func:`make_bench_record` stamps the envelope the
+regression gate (``benchmarks/check_regression.py``) validates, so a
+benchmark emitted today is trendable against any run log or any future
+benchmark without format sniffing."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import numpy as np
+
+from repro.obs.schema import make_record
+
+
+def make_bench_record(bench: str, config: dict, rows: list) -> dict:
+    """A schema-valid ``bench`` record (``kind="bench"``, envelope stamped).
+
+    ``rows`` is the benchmark's ``(kind, W, epoch, value)`` tuples — the
+    same shape ``BENCH_cd_grab.json`` has always carried; pre-schema files
+    (no envelope) stay readable by the regression gate."""
+    return make_record("bench", time.time(), 0, bench=bench, config=config,
+                       rows=[list(r) for r in rows])
+
+
+def write_bench_json(path: str, rec: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
 
 
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:

@@ -21,6 +21,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="repeat generate to populate the latency quantiles "
+                         "(round 0 includes compile)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append the serve latency record (schema-validated "
+                         "JSONL) to this path")
     args = ap.parse_args()
 
     _, cfg = get_config(args.arch)
@@ -37,12 +43,26 @@ def main():
         batch = {"tokens": jax.random.randint(
             key, (args.batch, args.prompt_len), 0, cfg.vocab)}
 
-    eng = ServeEngine(params, cfg, max_len=args.prompt_len + args.tokens + 8)
-    t0 = time.time()
-    out = eng.generate(batch, args.tokens)
-    dt = time.time() - t0
-    print(f"{args.arch} (smoke config): generated {out.shape} tokens "
-          f"in {dt:.2f}s ({out.size / dt:.1f} tok/s incl. compile)")
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry(args.metrics_out)
+    eng = ServeEngine(params, cfg, max_len=args.prompt_len + args.tokens + 8,
+                      metrics=reg)
+    t0 = time.perf_counter()
+    for _ in range(max(1, args.rounds)):
+        out = eng.generate(batch, args.tokens)
+    dt = time.perf_counter() - t0
+    print(f"{args.arch} (smoke config): generated {out.shape} tokens x "
+          f"{args.rounds} round(s) in {dt:.2f}s "
+          f"({args.rounds * out.size / dt:.1f} tok/s incl. compile)")
+    lat = eng.latency_summary()
+    for name, t in lat["timers"].items():
+        print(f"  {name}: p50 {t['p50_s'] * 1e3:.2f}ms  "
+              f"p95 {t['p95_s'] * 1e3:.2f}ms  p99 {t['p99_s'] * 1e3:.2f}ms  "
+              f"(n={t['count']})")
+    reg.emit("serve", arch=args.arch, batch=args.batch,
+             prompt_len=args.prompt_len, tokens=args.tokens, **lat)
+    reg.close()
     print(out)
 
 

@@ -63,6 +63,16 @@ def main():
                          "intra-host stage (0 = flat single-stage gather)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the structured run log (schema-validated "
+                         "JSONL: run_meta + per-epoch timers/quality "
+                         "metrics + events) to this path")
+    ap.add_argument("--profile-steps", default=None, metavar="A:B",
+                    help="capture a JAX profiler trace for global steps "
+                         "[A, B) (after compile/warm-up; view with "
+                         "tensorboard or perfetto)")
+    ap.add_argument("--profile-dir", default="profile_trace",
+                    help="directory for the --profile-steps trace")
     args = ap.parse_args()
 
     p = PRESETS[args.preset]
@@ -85,7 +95,10 @@ def main():
     loop = LoopConfig(epochs=args.epochs or p["epochs"], n_micro=p["n_micro"],
                       ordering=args.ordering, workers=args.workers,
                       sign_wire=args.sign_wire, sign_hier=args.sign_hier,
-                      ckpt_dir=args.ckpt_dir, log_every=10, mesh=mesh)
+                      ckpt_dir=args.ckpt_dir, log_every=10, mesh=mesh,
+                      metrics_out=args.metrics_out,
+                      profile_steps=args.profile_steps,
+                      profile_dir=args.profile_dir)
     grab_cfg = None
     if args.ordering in ("grab", "cd-grab"):
         grab_cfg = GrabConfig(pair_balance=args.ordering == "cd-grab",

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Optional
 
 import numpy as np
@@ -27,8 +28,24 @@ from repro.core.orderings import OrderPolicy
 
 
 class PermutedLoader:
+    """``metrics`` (an ``obs.MetricsRegistry``) exposes the prefetch
+    pipeline's health, all host-side perf_counter/qsize reads:
+
+    * ``loader.queue_depth`` (gauge) — prefetch-queue depth at each consumer
+      ``get``: pinned at ``prefetch`` means the producer keeps up, hovering
+      at 0 means every step races the producer;
+    * ``loader.producer_wait_s`` (counter) — consumer time blocked waiting
+      on a slow producer (starvation: the loop is data-bound, not
+      compute-bound). Previously this time was silently swallowed by the
+      poll loop;
+    * ``loader.producer_blocked_s`` (counter) — producer time blocked on a
+      full queue (the healthy direction: data is ahead of compute);
+    * ``loader.starvation_polls`` (counter) — empty-queue poll timeouts.
+    """
+
     def __init__(self, dataset, policy: OrderPolicy, micro_size: int,
-                 host_id: int = 0, n_hosts: int = 1, prefetch: int = 2):
+                 host_id: int = 0, n_hosts: int = 1, prefetch: int = 2,
+                 metrics=None):
         assert len(dataset) % micro_size == 0, \
             "dataset size must divide into microbatches"
         self.ds = dataset
@@ -39,6 +56,7 @@ class PermutedLoader:
             f"policy orders {self.policy.n} units, loader has {self.n_micro}"
         self.host_id, self.n_hosts = host_id, n_hosts
         self.prefetch = prefetch
+        self.metrics = metrics
 
     def micro_indices(self, epoch: int, step: int) -> np.ndarray:
         """Example indices for global microbatch `step` of `epoch`."""
@@ -67,20 +85,36 @@ class PermutedLoader:
           producer is still alive — a producer that dies without enqueueing
           (interpreter teardown killing the daemon thread, a future refactor
           dropping the exception hand-off) raises here instead of hanging
-          the training loop forever on an empty queue.
+          the training loop forever on an empty queue;
+        * time the consumer spends blocked in those polls is *recorded*, not
+          swallowed: with a ``metrics`` registry, every blocked second lands
+          in ``loader.producer_wait_s`` (and depth/starvation gauges), so a
+          data-bound loop is visible in the run log instead of masquerading
+          as slow steps.
         """
         q: queue.Queue = queue.Queue(maxsize=self.prefetch)
         stop = object()
         shutdown = threading.Event()
+        reg = self.metrics
+        depth_gauge = reg.gauge("loader.queue_depth") if reg else None
+        wait_counter = reg.counter("loader.producer_wait_s") if reg else None
+        starve_counter = reg.counter("loader.starvation_polls") if reg else None
+        blocked_counter = (reg.counter("loader.producer_blocked_s")
+                           if reg else None)
 
         def bounded_put(item) -> bool:
-            while not shutdown.is_set():
-                try:
-                    q.put(item, timeout=0.05)
-                    return True
-                except queue.Full:
-                    continue
-            return False
+            t_put = time.perf_counter()
+            try:
+                while not shutdown.is_set():
+                    try:
+                        q.put(item, timeout=0.05)
+                        return True
+                    except queue.Full:
+                        continue
+                return False
+            finally:
+                if blocked_counter is not None:
+                    blocked_counter.inc(time.perf_counter() - t_put)
 
         def producer():
             try:
@@ -95,22 +129,32 @@ class PermutedLoader:
         t.start()
         try:
             while True:
+                if depth_gauge is not None:
+                    depth_gauge.set(q.qsize())
+                t_wait = time.perf_counter()
                 try:
-                    item = q.get(timeout=0.2)
-                except queue.Empty:
-                    if t.is_alive():
-                        continue
-                    # the producer can finish between our last get and the
-                    # liveness check — drain anything it managed to enqueue
-                    # before declaring it dead
                     try:
-                        item = q.get_nowait()
+                        item = q.get(timeout=0.2)
                     except queue.Empty:
-                        raise RuntimeError(
-                            f"PermutedLoader producer thread died without "
-                            f"delivering a result (epoch {epoch}, after "
-                            f"start_step {start_step}): the prefetch queue "
-                            f"is empty and the thread is gone") from None
+                        if starve_counter is not None:
+                            starve_counter.inc()
+                        if t.is_alive():
+                            continue
+                        # the producer can finish between our last get and
+                        # the liveness check — drain anything it managed to
+                        # enqueue before declaring it dead
+                        try:
+                            item = q.get_nowait()
+                        except queue.Empty:
+                            raise RuntimeError(
+                                f"PermutedLoader producer thread died "
+                                f"without delivering a result (epoch "
+                                f"{epoch}, after start_step {start_step}): "
+                                f"the prefetch queue is empty and the "
+                                f"thread is gone") from None
+                finally:
+                    if wait_counter is not None:
+                        wait_counter.inc(time.perf_counter() - t_wait)
                 if item is stop:
                     break
                 if isinstance(item, tuple) and item[0] is stop:

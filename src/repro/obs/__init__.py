@@ -1,0 +1,21 @@
+"""Runtime telemetry: metrics registry + phase tracing + run-log schema.
+
+``MetricsRegistry`` (counters / gauges / streaming-quantile timers with a
+schema-validated JSONL sink), ``phase`` (profiler-annotated, registry-timed
+scopes), ``ProfileWindow`` (``--profile-steps A:B`` mid-run trace capture),
+and ``ordering_quality`` (zero-sync per-epoch metrics from the device sign
+buffer). See each module's docstring for the contracts.
+"""
+from repro.obs.quality import ordering_quality
+from repro.obs.registry import (Counter, Gauge, JsonlSink, MetricsRegistry,
+                                P2Quantile, QuantileTimer)
+from repro.obs.schema import (KINDS, SCHEMA_VERSION, SchemaError, make_record,
+                              read_jsonl, records_of_kind, validate_record)
+from repro.obs.trace import ProfileWindow, parse_profile_steps, phase
+
+__all__ = [
+    "Counter", "Gauge", "JsonlSink", "MetricsRegistry", "P2Quantile",
+    "QuantileTimer", "ProfileWindow", "parse_profile_steps", "phase",
+    "ordering_quality", "KINDS", "SCHEMA_VERSION", "SchemaError",
+    "make_record", "read_jsonl", "records_of_kind", "validate_record",
+]

@@ -1,0 +1,247 @@
+"""Lightweight metrics registry: counters, gauges, streaming-quantile timers,
+and a schema-validated JSONL sink.
+
+Designed for the dispatch-asynchronous training loop, so the rules are:
+
+* **zero device interaction** — everything here is host-side floats from
+  ``time.perf_counter()`` or values the caller already holds; recording a
+  metric never touches a ``jax.Array`` (the transfer-guard test in
+  ``tests/test_async_loop.py`` runs the fully-instrumented loop under
+  ``jax.transfer_guard_device_to_host("disallow")`` to enforce this);
+* **O(1) memory per metric** — timers keep streaming P² quantile estimators
+  (Jain & Chlamtac 1985), not sample buffers, so per-step recording over a
+  million steps costs the same as over ten;
+* **one schema** — every emitted record passes
+  :func:`repro.obs.schema.validate_record` before it hits the file, and the
+  same schema governs the benchmark JSONs (``benchmarks/common.py``), so
+  live runs and offline benchmarks are directly comparable.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+from repro.obs.schema import make_record
+
+
+class Counter:
+    """Monotonic accumulator (float-valued: counts or summed seconds)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+class Gauge:
+    """Last-value gauge that also tracks min/max/mean of everything set."""
+
+    __slots__ = ("value", "n", "total", "min", "max")
+
+    def __init__(self):
+        self.value = 0.0
+        self.n = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def set(self, v: float) -> None:
+        v = float(v)
+        self.value = v
+        self.n += 1
+        self.total += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def summary(self) -> dict:
+        if not self.n:
+            return {"last": 0.0, "n": 0, "mean": 0.0, "min": 0.0, "max": 0.0}
+        return {"last": self.value, "n": self.n, "mean": self.total / self.n,
+                "min": self.min, "max": self.max}
+
+
+class P2Quantile:
+    """Streaming quantile estimator (the P² algorithm, Jain & Chlamtac 1985).
+
+    Five markers track the running p-quantile in O(1) memory and O(1) update
+    time; exact for the first five observations, then piecewise-parabolic
+    interpolation. Accuracy on unimodal distributions is a few percent of
+    the interquartile range (``tests/test_obs.py`` pins it against numpy).
+    """
+
+    __slots__ = ("p", "q", "n", "np_", "dn", "_init")
+
+    def __init__(self, p: float):
+        assert 0.0 < p < 1.0, p
+        self.p = p
+        self._init: list = []
+        self.q: list = []          # marker heights
+        self.n: list = []          # marker positions (1-indexed)
+        self.np_: list = []        # desired positions
+        self.dn = [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0]
+
+    def add(self, x: float) -> None:
+        x = float(x)
+        if len(self._init) < 5:
+            self._init.append(x)
+            if len(self._init) == 5:
+                self._init.sort()
+                self.q = list(self._init)
+                self.n = [1.0, 2.0, 3.0, 4.0, 5.0]
+                p = self.p
+                self.np_ = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p,
+                            3.0 + 2.0 * p, 5.0]
+            return
+        q, n = self.q, self.n
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and not (q[k] <= x < q[k + 1]):
+                k += 1
+        for i in range(k + 1, 5):
+            n[i] += 1.0
+        for i in range(5):
+            self.np_[i] += self.dn[i]
+        for i in (1, 2, 3):
+            d = self.np_[i] - n[i]
+            if ((d >= 1.0 and n[i + 1] - n[i] > 1.0)
+                    or (d <= -1.0 and n[i - 1] - n[i] < -1.0)):
+                s = 1.0 if d > 0 else -1.0
+                # parabolic (P²) prediction, linear fallback when it would
+                # break marker monotonicity
+                qp = q[i] + s / (n[i + 1] - n[i - 1]) * (
+                    (n[i] - n[i - 1] + s) * (q[i + 1] - q[i])
+                    / (n[i + 1] - n[i])
+                    + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1])
+                    / (n[i] - n[i - 1]))
+                if not (q[i - 1] < qp < q[i + 1]):
+                    j = i + int(s)
+                    qp = q[i] + s * (q[j] - q[i]) / (n[j] - n[i])
+                q[i] = qp
+                n[i] += s
+
+    @property
+    def count(self) -> int:
+        return len(self._init) if len(self._init) < 5 else int(self.n[4])
+
+    def quantile(self) -> float:
+        if len(self._init) < 5:
+            if not self._init:
+                return 0.0
+            xs = sorted(self._init)
+            # nearest-rank on the few samples we have
+            idx = min(len(xs) - 1, max(0, round(self.p * (len(xs) - 1))))
+            return xs[idx]
+        return self.q[2]
+
+
+class QuantileTimer:
+    """Duration metric: count/sum/max plus streaming p50/p95/p99."""
+
+    QUANTILES = (0.5, 0.95, 0.99)
+    __slots__ = ("count", "total", "max", "_est")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.max = 0.0
+        self._est = {p: P2Quantile(p) for p in self.QUANTILES}
+
+    def record(self, seconds: float) -> None:
+        seconds = float(seconds)
+        self.count += 1
+        self.total += seconds
+        self.max = max(self.max, seconds)
+        for est in self._est.values():
+            est.add(seconds)
+
+    def summary(self) -> dict:
+        mean = self.total / self.count if self.count else 0.0
+        out = {"count": self.count, "mean_s": mean, "max_s": self.max}
+        for p, est in self._est.items():
+            out[f"p{int(p * 100)}_s"] = est.quantile()
+        return out
+
+
+class JsonlSink:
+    """Append-only JSONL writer; every record is schema-validated and
+    flushed immediately, so a killed run keeps everything emitted so far."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "a")
+
+    def write(self, rec: dict) -> None:
+        import json
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+class MetricsRegistry:
+    """Named counters/gauges/timers + the record emitter.
+
+    ``jsonl_path`` attaches a :class:`JsonlSink`; without one, ``emit``
+    validates and drops (so instrumented code paths never branch on whether
+    telemetry is on). ``event`` renders its message to stdout by default —
+    the training loop's former ``print``s route through it unchanged — and
+    additionally logs a structured ``event`` record when a sink is attached.
+    """
+
+    def __init__(self, jsonl_path: Optional[str] = None,
+                 print_events: bool = True):
+        self.counters: Dict[str, Counter] = {}
+        self.gauges: Dict[str, Gauge] = {}
+        self.timers: Dict[str, QuantileTimer] = {}
+        self.print_events = print_events
+        self.sink = JsonlSink(jsonl_path) if jsonl_path else None
+        self._seq = 0
+
+    # -- metric accessors (create-on-first-use) ---------------------------
+    def counter(self, name: str) -> Counter:
+        return self.counters.setdefault(name, Counter())
+
+    def gauge(self, name: str) -> Gauge:
+        return self.gauges.setdefault(name, Gauge())
+
+    def timer(self, name: str) -> QuantileTimer:
+        return self.timers.setdefault(name, QuantileTimer())
+
+    def summary(self) -> dict:
+        """Snapshot of every metric (cumulative since registry creation)."""
+        return {
+            "timers": {k: t.summary() for k, t in self.timers.items()},
+            "counters": {k: c.value for k, c in self.counters.items()},
+            "gauges": {k: g.summary() for k, g in self.gauges.items()},
+        }
+
+    # -- record emission ---------------------------------------------------
+    def emit(self, kind: str, **fields) -> dict:
+        rec = make_record(kind, time.time(), self._seq, **fields)
+        self._seq += 1
+        if self.sink is not None:
+            self.sink.write(rec)
+        return rec
+
+    def event(self, msg: str, **fields) -> None:
+        """A human-readable event: printed (plain-text rendering preserved)
+        and, with a sink, logged as a structured record."""
+        if self.print_events:
+            print(msg)
+        self.emit("event", msg=msg, **fields)
+
+    def close(self) -> None:
+        if self.sink is not None:
+            self.sink.close()

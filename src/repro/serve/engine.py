@@ -6,7 +6,8 @@ decode step against a seq_len-deep cache, per the assignment).
 """
 from __future__ import annotations
 
-from typing import Callable
+import time
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +15,7 @@ import numpy as np
 
 from repro.models import lm, whisper
 from repro.models.config import ModelConfig
+from repro.obs import MetricsRegistry, phase
 
 
 def build_prefill(cfg: ModelConfig, max_len: int) -> Callable:
@@ -42,19 +44,47 @@ def build_decode_step(cfg: ModelConfig) -> Callable:
 
 
 class ServeEngine:
-    """Minimal batched greedy-decoding engine over the jit'd steps."""
+    """Minimal batched greedy-decoding engine over the jit'd steps.
 
-    def __init__(self, params, cfg: ModelConfig, max_len: int):
+    Latency telemetry (``repro.obs``) is always on and costs two
+    ``perf_counter`` reads per phase: ``serve.prefill`` times the prefill +
+    first-token sync, ``serve.decode`` times each subsequent token (the
+    per-token host sync the greedy loop already performs). Streaming
+    p50/p95/p99 accumulate across ``generate`` calls —
+    :meth:`latency_summary` is the serve-path record the load benchmarks
+    and the run log share (schema kind ``serve``).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, max_len: int,
+                 metrics: Optional[MetricsRegistry] = None):
         self.params, self.cfg, self.max_len = params, cfg, max_len
         self._prefill = jax.jit(build_prefill(cfg, max_len))
         self._decode = jax.jit(build_decode_step(cfg))
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     def generate(self, batch, n_tokens: int) -> np.ndarray:
-        logits, cache = self._prefill(self.params, batch)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out = [np.asarray(tok)]
-        for _ in range(n_tokens - 1):
-            logits, cache = self._decode(self.params, tok, cache)
+        reg = self.metrics
+        prefill_t = reg.timer("serve.prefill")
+        decode_t = reg.timer("serve.decode")
+        t0 = time.perf_counter()
+        with phase("serve_prefill"):
+            logits, cache = self._prefill(self.params, batch)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out.append(np.asarray(tok))
+            out = [np.asarray(tok)]           # sync: first token on host
+        prefill_t.record(time.perf_counter() - t0)
+        for _ in range(n_tokens - 1):
+            t0 = time.perf_counter()
+            with phase("serve_decode"):
+                logits, cache = self._decode(self.params, tok, cache)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                out.append(np.asarray(tok))   # sync: one token per step
+            decode_t.record(time.perf_counter() - t0)
+        reg.counter("serve.tokens").inc(n_tokens * out[0].shape[0])
+        reg.counter("serve.requests").inc()
         return np.stack(out, axis=1)
+
+    def latency_summary(self) -> dict:
+        """Cumulative prefill/decode latency quantiles (p50/p95/p99 seconds)
+        plus token/request counters, in run-log ``serve`` record shape."""
+        s = self.metrics.summary()
+        return {"timers": s["timers"], "counters": s["counters"]}

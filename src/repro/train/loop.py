@@ -23,6 +23,14 @@ step is jitted with ``in_shardings`` from ``launch.sharding`` (the
 Resume is **exact**: a checkpoint (mid-epoch or boundary) carries the sign
 buffer and GraB state inside ``TrainState``, so the loop continues from the
 exact step it stopped at — no epoch replay, no stale running sum.
+
+Telemetry (``repro.obs``) rides the same contract: phase timers
+(loader wait / dispatch / epoch reorder / checkpoint save) are
+``perf_counter`` spans with profiler annotations, per-epoch ordering-quality
+metrics are computed from the sign buffer's existing once-per-epoch fetch,
+and everything lands in one schema-validated JSONL run log
+(``LoopConfig.metrics_out``) — recording never adds a device→host sync
+(enforced by the transfer-guarded ``tests/test_async_loop.py``).
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ import numpy as np
 from repro.core.grab import GrabConfig, grab_epoch_end, make_sketch
 from repro.core.orderings import OrderPolicy, make_policy
 from repro.data.loader import PermutedLoader
+from repro.obs import MetricsRegistry, ProfileWindow, ordering_quality, phase
 from repro.train.checkpoint import CheckpointManager
 from repro.train.state import TrainState
 from repro.train.step import build_train_step, init_train_state
@@ -66,6 +75,15 @@ class LoopConfig:
     shard_policy: Any = None      # launch.sharding.ShardPolicy (mesh only)
     cd_constraints: Optional[str] = None  # CD_GRAB_CANDIDATES name; None =
     #                               the measured hillclimb winner
+    # --- telemetry (repro.obs) ---------------------------------------------
+    metrics_out: Optional[str] = None     # JSONL run-log path (None = no sink;
+    #                               metrics still accumulate in-process)
+    metrics: Any = None           # inject a MetricsRegistry (tests/benchmarks
+    #                               sharing one registry across runs); when
+    #                               set, metrics_out is ignored
+    profile_steps: Optional[str] = None   # "A:B": capture a JAX profiler
+    #                               trace for global steps [A, B)
+    profile_dir: str = "profile_trace"    # where the captured trace lands
     # --- legacy host-synchronous dispatch (benchmark A/B only) -------------
     sync_transfers: bool = False  # fetch loss + signs every step (blocking)
 
@@ -116,7 +134,46 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
         policy_kw["pair"] = grab_cfg.pair_balance
     policy: OrderPolicy = make_policy(loop_cfg.ordering, n_micro_total,
                                       seed=loop_cfg.seed, **policy_kw)
-    loader = PermutedLoader(dataset, policy, micro_size)
+
+    # --- telemetry: registry + run metadata + profiler window --------------
+    own_reg = loop_cfg.metrics is None
+    reg: MetricsRegistry = (loop_cfg.metrics if loop_cfg.metrics is not None
+                            else MetricsRegistry(loop_cfg.metrics_out))
+    profiler = ProfileWindow(loop_cfg.profile_steps, loop_cfg.profile_dir,
+                             reg=reg)
+    run_meta = {
+        "ordering": loop_cfg.ordering, "workers": n_workers,
+        "epochs": loop_cfg.epochs, "steps_per_epoch": steps_per_epoch,
+        "n_micro": loop_cfg.n_micro, "micro_size": micro_size,
+        "n_examples": len(dataset), "seed": loop_cfg.seed,
+        "sync_transfers": loop_cfg.sync_transfers,
+        "mesh": dict(loop_cfg.mesh.shape) if loop_cfg.mesh is not None else None,
+        "devices": jax.device_count(),
+    }
+    if grab_cfg is not None:
+        run_meta.update(balancer=grab_cfg.balancer,
+                        sketch_dim=grab_cfg.sketch_dim,
+                        pair_balance=grab_cfg.pair_balance,
+                        sign_wire=grab_cfg.sign_wire,
+                        sign_hier=grab_cfg.sign_hier)
+    meta_kw = {}
+    if cd_grab and n_workers > 1 and grab_cfg.sketch_dim > 0:
+        # analytic sign-collective roofline terms as run metadata, so the
+        # modeled wire bytes sit in the same record stream as the measured
+        # step times (group = W: one gathered row per logical worker —
+        # matches the live mesh path where W == the data-axis size)
+        from repro.launch.roofline import sign_collective_terms
+        deferred = (loop_cfg.mesh is not None
+                    and grab_cfg.sign_wire == "int8"
+                    and grab_cfg.balancer == "deterministic")
+        meta_kw["sign_collective"] = sign_collective_terms(
+            n_workers, grab_cfg.sketch_dim,
+            pair_steps=(n_micro_total // n_workers) // 2, group=n_workers,
+            wire=grab_cfg.sign_wire, hier_group=grab_cfg.sign_hier,
+            deferred=deferred)
+    reg.emit("run_meta", run="train.loop", config=run_meta, **meta_kw)
+
+    loader = PermutedLoader(dataset, policy, micro_size, metrics=reg)
 
     sketch = None
     if grab_cfg is not None and grab_cfg.sketch_dim > 0:
@@ -165,8 +222,9 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
             resume_step = int(step) - start_epoch * steps_per_epoch
             assert 0 <= resume_step <= steps_per_epoch, \
                 (step, start_epoch, steps_per_epoch)
-            print(f"[loop] resumed from step {step}: epoch {start_epoch}, "
-                  f"in-epoch step {resume_step}")
+            reg.event(f"[loop] resumed from step {step}: epoch {start_epoch}, "
+                      f"in-epoch step {resume_step}",
+                      epoch=start_epoch, step=int(step))
 
     # built once — rebuilding jax.jit(lambda ...) at each boundary retraced
     # (and recompiled) the epoch-end rollover every epoch. On the mesh path
@@ -194,18 +252,24 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
         pending.clear()
         return history[-1]["loss"]
 
+    step_timer = reg.timer("phase.step")
     for epoch in range(start_epoch, loop_cfg.epochs):
-        t0 = time.time()
+        t0 = time.perf_counter()
         start_s = resume_step if epoch == start_epoch else 0
         micro_iter = loader.epoch(epoch, start_step=start_s * loop_cfg.n_micro)
         for step_i in range(start_s, steps_per_epoch):
-            micros = []
-            for _ in range(loop_cfg.n_micro):
-                _, mb = next(micro_iter)
-                micros.append(mb)
-            batch = {k: np.stack([m[k] for m in micros]) for k in micros[0]}
-            state, metrics = step_fn(state, batch)
+            ts0 = time.perf_counter()
             global_step = epoch * steps_per_epoch + step_i + 1
+            profiler.on_step(global_step - 1)
+            with phase("loader_wait", reg):
+                micros = []
+                for _ in range(loop_cfg.n_micro):
+                    _, mb = next(micro_iter)
+                    micros.append(mb)
+                batch = {k: np.stack([m[k] for m in micros])
+                         for k in micros[0]}
+            with phase("dispatch", reg):
+                state, metrics = step_fn(state, batch)
             pending.append((epoch, global_step, metrics["loss"]))
             if loop_cfg.sync_transfers:
                 # legacy host-synchronous dispatch: block on the loss and the
@@ -219,30 +283,52 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
                 loss = None
             if (loss is not None and loop_cfg.log_every
                     and step_i % loop_cfg.log_every == 0):
-                print(f"[loop] epoch {epoch} step {step_i}/{steps_per_epoch} "
-                      f"loss {loss:.4f}")
+                reg.event(f"[loop] epoch {epoch} step {step_i}/"
+                          f"{steps_per_epoch} loss {loss:.4f}",
+                          epoch=epoch, step=global_step, loss=loss)
             if (manager and loop_cfg.ckpt_every_steps
                     and global_step % loop_cfg.ckpt_every_steps == 0):
-                manager.save(global_step, state,
-                             extra={"epoch": epoch, "order": policy.state_dict()})
+                with phase("ckpt_save", reg):
+                    manager.save(global_step, state,
+                                 extra={"epoch": epoch,
+                                        "order": policy.state_dict()})
+            # dispatch wall time per step (perf_counter, no sync): on the
+            # async path this is host/dispatch latency; sync_transfers=True
+            # makes it the true blocking step time
+            step_timer.record(time.perf_counter() - ts0)
         # epoch boundary: ONE sign fetch for the whole epoch, then commit the
         # Alg.3 reorder (cd-grab: the coordinated global two-pointer pass)
         # and roll the GraB means
         if use_grab:
-            policy.apply_epoch_signs(epoch, jax.device_get(state.signs))
-            state = state._replace(grab=epoch_end_fn(state.grab))
+            with phase("epoch_reorder", reg):
+                raw_signs = jax.device_get(state.signs)
+                policy.apply_epoch_signs(epoch, raw_signs)
+                state = state._replace(grab=epoch_end_fn(state.grab))
+            # zero-sync ordering quality: numpy over the buffer the reorder
+            # already fetched — never an extra transfer
+            reg.emit("quality", epoch=epoch,
+                     **ordering_quality(raw_signs, grab_cfg.pair_balance))
         flush_losses()
         if manager:
-            manager.save((epoch + 1) * steps_per_epoch, state,
-                         extra={"epoch": epoch + 1, "order": policy.state_dict()})
+            with phase("ckpt_save", reg):
+                manager.save((epoch + 1) * steps_per_epoch, state,
+                             extra={"epoch": epoch + 1,
+                                    "order": policy.state_dict()})
         if hooks:
             hooks(epoch, state, history)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
+        ep_losses = [h["loss"] for h in history if h["epoch"] == epoch]
+        mean_loss = float(np.mean(ep_losses)) if ep_losses else None
+        reg.emit("epoch", epoch=epoch, duration_s=dt, mean_loss=mean_loss,
+                 **reg.summary())
         if loop_cfg.log_every:
-            ep_losses = [h["loss"] for h in history if h["epoch"] == epoch]
-            print(f"[loop] epoch {epoch} done in {dt:.1f}s "
-                  f"mean loss {np.mean(ep_losses):.4f}")
+            loss_txt = "nan" if mean_loss is None else f"{mean_loss:.4f}"
+            reg.event(f"[loop] epoch {epoch} done in {dt:.1f}s "
+                      f"mean loss {loss_txt}", epoch=epoch)
     flush_losses()
     if manager:
         manager.wait()
+    profiler.close()
+    if own_reg:
+        reg.close()
     return state, history

@@ -48,6 +48,12 @@ def main():
     sys.argv = ["train_lm.py", "--preset", "cpu-smoke",
                 "--ordering", "cd-grab", "--workers", "4", "--mesh",
                 "--sketch-dim", "96", "--epochs", str(EPOCHS)]
+    # the parent test can ask for the structured run log; telemetry runs
+    # inside the same transfer guard + device_get counting, so the asserted
+    # bounds double as "instrumentation adds zero per-step host syncs"
+    metrics_out = os.environ.get("REPRO_TEST_METRICS")
+    if metrics_out:
+        sys.argv += ["--metrics-out", metrics_out]
     import runpy
     with jax.transfer_guard_device_to_host("disallow"):
         runpy.run_path(os.path.join(_REPO, "examples", "train_lm.py"),

@@ -1,0 +1,410 @@
+"""Telemetry subsystem: registry metrics, schema round-trips, ordering
+quality, phase timing, and the regression gate."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "benchmarks")))
+
+from repro.obs import (Counter, Gauge, MetricsRegistry, P2Quantile,
+                       ProfileWindow, QuantileTimer, SchemaError, make_record,
+                       ordering_quality, parse_profile_steps, phase,
+                       read_jsonl, records_of_kind, validate_record)
+
+
+# --------------------------------------------------------------------------
+# registry primitives
+# --------------------------------------------------------------------------
+
+def test_counter_and_gauge():
+    c = Counter()
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    g = Gauge()
+    assert g.summary() == {"last": 0.0, "n": 0, "mean": 0.0, "min": 0.0,
+                           "max": 0.0}
+    for v in (3, 1, 2):
+        g.set(v)
+    s = g.summary()
+    assert s["last"] == 2.0 and s["min"] == 1.0 and s["max"] == 3.0
+    assert s["n"] == 3 and s["mean"] == pytest.approx(2.0)
+
+
+@pytest.mark.parametrize("p", [0.5, 0.95, 0.99])
+@pytest.mark.parametrize("dist", ["uniform", "lognormal"])
+def test_p2_quantile_tracks_numpy(p, dist):
+    """The P² streaming estimate stays within a few percent (of the value
+    scale) of numpy's exact quantile on unimodal distributions."""
+    rng = np.random.default_rng(0)
+    xs = (rng.uniform(0.0, 1.0, 5000) if dist == "uniform"
+          else rng.lognormal(0.0, 0.5, 5000))
+    est = P2Quantile(p)
+    for x in xs:
+        est.add(x)
+    exact = float(np.quantile(xs, p))
+    scale = float(xs.max() - xs.min())
+    assert abs(est.quantile() - exact) < 0.05 * scale, \
+        (p, dist, est.quantile(), exact)
+    assert est.count == len(xs)
+
+
+def test_p2_quantile_exact_below_five_samples():
+    est = P2Quantile(0.5)
+    assert est.quantile() == 0.0
+    for x in (5.0, 1.0, 3.0):
+        est.add(x)
+    assert est.quantile() == 3.0          # exact median of {1, 3, 5}
+
+
+def test_quantile_timer_summary_shape():
+    t = QuantileTimer()
+    for i in range(100):
+        t.record(0.01 * (i + 1))
+    s = t.summary()
+    assert s["count"] == 100
+    assert s["max_s"] == pytest.approx(1.0)
+    assert s["mean_s"] == pytest.approx(0.505)
+    assert s["p50_s"] <= s["p95_s"] <= s["p99_s"] <= s["max_s"]
+    assert s["p50_s"] == pytest.approx(0.5, rel=0.1)
+
+
+# --------------------------------------------------------------------------
+# schema + sink round-trip
+# --------------------------------------------------------------------------
+
+def test_make_record_converts_numpy():
+    rec = make_record("event", 1.0, 0, msg="hi",
+                      val=np.float32(2.5), arr=np.arange(3))
+    assert rec["val"] == 2.5 and rec["arr"] == [0, 1, 2]
+    json.dumps(rec)                       # plain JSON types throughout
+
+
+def test_validate_record_rejects_bad_records():
+    with pytest.raises(SchemaError, match="envelope"):
+        validate_record({"kind": "event"})
+    with pytest.raises(SchemaError, match="unknown record kind"):
+        make_record("nope", 1.0, 0)
+    with pytest.raises(SchemaError, match="missing required fields"):
+        make_record("event", 1.0, 0)      # no msg
+    with pytest.raises(SchemaError, match="schema"):
+        validate_record({"schema": "other/v9", "kind": "event",
+                         "time_unix": 1.0, "seq": 0, "msg": "x"})
+    with pytest.raises(SchemaError, match="dict"):
+        validate_record([1, 2])
+
+
+def test_jsonl_sink_round_trip(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    reg = MetricsRegistry(path, print_events=False)
+    reg.counter("c").inc(3)
+    reg.event("hello", epoch=0)
+    reg.emit("epoch", epoch=0, duration_s=1.5, mean_loss=0.25,
+             **reg.summary())
+    reg.close()
+    records = read_jsonl(path)
+    assert [r["kind"] for r in records] == ["event", "epoch"]
+    assert [r["seq"] for r in records] == [0, 1]
+    ep = records_of_kind(records, "epoch")[0]
+    assert ep["counters"]["c"] == 3.0
+    assert ep["mean_loss"] == 0.25
+
+
+def test_jsonl_reader_flags_offending_line(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    good = json.dumps(make_record("event", 1.0, 0, msg="ok"))
+    path.write_text(good + "\n" + '{"kind": "event"}\n')
+    with pytest.raises(SchemaError, match=r"bad\.jsonl:2"):
+        read_jsonl(str(path))
+    path.write_text(good + "\nnot json\n")
+    with pytest.raises(SchemaError, match="invalid JSON"):
+        read_jsonl(str(path))
+
+
+def test_registry_without_sink_still_validates():
+    reg = MetricsRegistry(print_events=False)
+    rec = reg.emit("event", msg="dropped but validated")
+    assert rec["kind"] == "event"
+    with pytest.raises(SchemaError):
+        reg.emit("quality", epoch=0)      # missing required fields
+
+
+# --------------------------------------------------------------------------
+# phase timing + profiler window plumbing
+# --------------------------------------------------------------------------
+
+def test_phase_records_into_registry():
+    reg = MetricsRegistry(print_events=False)
+    with phase("unit", reg):
+        pass
+    with phase("unit", reg):
+        pass
+    s = reg.timer("phase.unit").summary()
+    assert s["count"] == 2 and s["max_s"] >= 0.0
+
+
+def test_phase_propagates_exceptions_but_still_times():
+    reg = MetricsRegistry(print_events=False)
+    with pytest.raises(RuntimeError):
+        with phase("boom", reg):
+            raise RuntimeError("x")
+    assert reg.timer("phase.boom").count == 1
+
+
+def test_parse_profile_steps():
+    assert parse_profile_steps(None) is None
+    assert parse_profile_steps("") is None
+    assert parse_profile_steps("3:7") == (3, 7)
+    for bad in ("7:3", "3", "a:b", "-1:4", "3:3"):
+        with pytest.raises(ValueError):
+            parse_profile_steps(bad)
+
+
+def test_profile_window_state_machine(monkeypatch, tmp_path):
+    import repro.obs.trace as trace_mod
+    calls = []
+    monkeypatch.setattr(trace_mod.jax.profiler, "start_trace",
+                        lambda d: calls.append(("start", d)))
+    monkeypatch.setattr(trace_mod.jax.profiler, "stop_trace",
+                        lambda: calls.append(("stop",)))
+    win = ProfileWindow("2:4", log_dir=str(tmp_path))
+    for s in range(6):
+        win.on_step(s)
+    win.close()
+    assert calls == [("start", str(tmp_path)), ("stop",)]
+    # a run ending inside the window closes the capture
+    calls.clear()
+    win = ProfileWindow("1:100", log_dir=str(tmp_path))
+    win.on_step(1)
+    win.close()
+    assert calls == [("start", str(tmp_path)), ("stop",)]
+    # inactive spec: free no-op
+    calls.clear()
+    win = ProfileWindow(None)
+    win.on_step(0)
+    win.close()
+    assert calls == []
+
+
+# --------------------------------------------------------------------------
+# ordering-quality metrics
+# --------------------------------------------------------------------------
+
+def test_quality_alternating_signs_are_maximally_balanced():
+    t, w = 64, 1
+    raw = np.zeros((t, w), np.int8)
+    raw[1::2, 0] = np.where(np.arange(t // 2) % 2 == 0, 1, -1)
+    q = ordering_quality(raw, pair=True)
+    assert q["n_decisions"] == t // 2
+    assert q["signed_prefix_max"] == 1.0          # +1, 0, +1, 0, ...
+    assert q["herding_proxy_norm"] < 0.2
+    assert q["sign_flip_rate"] == 1.0
+    assert q["imbalance"] == 0.0
+    assert q["zero_fraction"] == 0.0
+
+
+def test_quality_constant_signs_random_walk_to_n():
+    raw = np.zeros((64, 2), np.int8)
+    raw[1::2, :] = 1                              # collapsed balancer
+    q = ordering_quality(raw, pair=True)
+    assert q["n_decisions"] == 64
+    assert q["signed_prefix_max"] == 64.0         # worst case: linear growth
+    assert q["herding_proxy_norm"] == pytest.approx(8.0)
+    assert q["sign_flip_rate"] == 0.0
+    assert q["imbalance"] == 1.0
+
+
+def test_quality_random_signs_sit_at_sqrt_n_scale():
+    rng = np.random.default_rng(0)
+    t, w = 512, 4
+    raw = np.zeros((t, w), np.int8)
+    raw[1::2, :] = rng.choice([-1, 1], size=(t // 2, w))
+    q = ordering_quality(raw, pair=True)
+    # random walk: prefix max is Theta(sqrt(n)) — normalized value is O(1)
+    # and clearly above a balanced stream's
+    assert 0.2 < q["herding_proxy_norm"] < 4.0
+    assert 0.3 < q["sign_flip_rate"] < 0.7
+
+
+def test_quality_balance_prefix_stays_worker_scale_for_pairs():
+    """Expanded pair signs cancel pairwise by construction, so the expanded
+    prefix max is O(W) no matter how badly the decisions balance."""
+    w = 4
+    raw = np.zeros((64, w), np.int8)
+    raw[1::2, :] = 1                              # worst decisions possible
+    q = ordering_quality(raw, pair=True)
+    assert q["balance_prefix_max"] <= 2 * w
+
+
+def test_quality_full_mode_and_edge_cases():
+    raw = np.array([1, -1, 1, -1], np.int8)       # 1-D, full (non-pair) mode
+    q = ordering_quality(raw, pair=False)
+    assert q["n_decisions"] == 4 and q["workers"] == 1
+    assert q["signed_prefix_max"] == 1.0
+    # odd trailing stash row in pair mode is dropped, mirroring the reorder
+    raw = np.zeros((5, 2), np.int8)
+    raw[1::2, :] = 1
+    q = ordering_quality(raw, pair=True)
+    assert q["n_decisions"] == 4
+    # empty buffer
+    q = ordering_quality(np.zeros((0, 3), np.int8), pair=True)
+    assert q["n_decisions"] == 0 and q["signed_prefix_max"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# the instrumented loop end-to-end (single device, no mesh)
+# --------------------------------------------------------------------------
+
+def test_run_training_emits_schema_valid_run_log(tmp_path):
+    import jax
+
+    from repro.data.synthetic import synthetic_classification
+    from repro.models.paper_models import logreg_init, logreg_loss
+    from repro.optim import constant, sgdm
+    from repro.train import LoopConfig, run_training
+
+    class ClsDataset:
+        def __init__(self, x, y):
+            self.x, self.y = x, y
+
+        def __len__(self):
+            return len(self.x)
+
+        def batch(self, idx):
+            return {"x": self.x[idx], "y": self.y[idx]}
+
+    x, y = synthetic_classification(64, 16, seed=0)
+    params = logreg_init(jax.random.PRNGKey(0), 16, 10)
+    loss_fn = lambda p, mb: (logreg_loss(p, mb), {})  # noqa: E731
+    path = str(tmp_path / "run.jsonl")
+    loop = LoopConfig(epochs=2, n_micro=4, ordering="grab", log_every=1,
+                      metrics_out=path)
+    run_training(loss_fn, params, sgdm(0.9), constant(0.05),
+                 ClsDataset(x, y), 4, loop)        # 16 micro -> 4 steps/epoch
+
+    records = read_jsonl(path)
+    meta = records_of_kind(records, "run_meta")
+    assert len(meta) == 1 and meta[0]["config"]["ordering"] == "grab"
+    epochs = records_of_kind(records, "epoch")
+    assert [r["epoch"] for r in epochs] == [0, 1]
+    assert all("phase.step" in r["timers"] for r in epochs)
+    assert all("phase.dispatch" in r["timers"] for r in epochs)
+    quality = records_of_kind(records, "quality")
+    assert [r["epoch"] for r in quality] == [0, 1]
+    assert all(r["n_decisions"] == 16 for r in quality)  # 16 micro/epoch
+    events = records_of_kind(records, "event")
+    assert any(e["msg"].startswith("[loop] epoch") for e in events)
+
+
+# --------------------------------------------------------------------------
+# the regression gate
+# --------------------------------------------------------------------------
+
+def _bench(tmp_path, name, rows, with_schema=True):
+    from common import make_bench_record
+    path = str(tmp_path / name)
+    if with_schema:
+        rec = make_bench_record("cd_grab_scaling", {"n": 32}, rows)
+    else:
+        rec = {"bench": "cd_grab_scaling", "config": {"n": 32},
+               "rows": [list(r) for r in rows]}     # pre-schema baseline
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    return path
+
+
+BASE_ROWS = [("herding", 1, 4, 2.0), ("herding", 8, 4, 3.0),
+             ("wallclock_sign_frac", 8, 0, 0.10),
+             ("wallclock_loop_speedup", 8, 0, 1.5)]
+
+
+def test_check_regression_passes_identical(tmp_path, capsys):
+    import check_regression as cr
+    cur = _bench(tmp_path, "cur.json", BASE_ROWS)
+    base = _bench(tmp_path, "base.json", BASE_ROWS, with_schema=False)
+    assert cr.main(["--current", cur, "--baseline", base]) == 0
+    assert "PASS" in capsys.readouterr().out
+
+
+def test_check_regression_fails_on_herding_regression(tmp_path, capsys):
+    import check_regression as cr
+    worse = [("herding", 1, 4, 2.0), ("herding", 8, 4, 3.9),  # +30% at W=8
+             ("wallclock_sign_frac", 8, 0, 0.10),
+             ("wallclock_loop_speedup", 8, 0, 1.5)]
+    cur = _bench(tmp_path, "cur.json", worse)
+    base = _bench(tmp_path, "base.json", BASE_ROWS)
+    assert cr.main(["--current", cur, "--baseline", base]) == 1
+    err = capsys.readouterr().err
+    assert "herding-bound regression" in err and "W=8" in err
+
+
+def test_check_regression_fails_on_step_time_regression(tmp_path, capsys):
+    import check_regression as cr
+    worse = [("herding", 8, 4, 3.0),
+             ("wallclock_sign_frac", 8, 0, 0.20),             # 2x the share
+             ("wallclock_loop_speedup", 8, 0, 1.0)]           # speedup gone
+    cur = _bench(tmp_path, "cur.json", worse)
+    base = _bench(tmp_path, "base.json", BASE_ROWS)
+    assert cr.main(["--current", cur, "--baseline", base]) == 1
+    err = capsys.readouterr().err
+    assert err.count("step-time regression") == 2
+
+
+def test_check_regression_uses_final_epoch_and_tolerance(tmp_path):
+    import check_regression as cr
+    # earlier-epoch rows are ignored; +15% at the final epoch passes a 20%
+    # gate and fails a 10% one
+    base = _bench(tmp_path, "base.json",
+                  [("herding", 1, 0, 99.0), ("herding", 1, 4, 2.0)])
+    cur = _bench(tmp_path, "cur.json",
+                 [("herding", 1, 0, 0.1), ("herding", 1, 4, 2.3)])
+    assert cr.main(["--current", cur, "--baseline", base]) == 0
+    assert cr.main(["--current", cur, "--baseline", base,
+                    "--herding-tol", "0.1"]) == 1
+
+
+def test_check_regression_validates_metrics_log(tmp_path, capsys):
+    import check_regression as cr
+    cur = _bench(tmp_path, "cur.json", BASE_ROWS)
+    base = _bench(tmp_path, "base.json", BASE_ROWS)
+    # a healthy run log passes
+    log = tmp_path / "run.jsonl"
+    reg = MetricsRegistry(str(log), print_events=False)
+    reg.emit("run_meta", run="train.loop", config={"ordering": "cd-grab"})
+    reg.timer("phase.step").record(0.01)
+    reg.emit("epoch", epoch=0, duration_s=1.0, **reg.summary())
+    reg.emit("quality", epoch=0, n_decisions=4, signed_prefix_max=1.0,
+             herding_proxy_norm=0.5, sign_flip_rate=1.0,
+             balance_prefix_max=1.0)
+    reg.close()
+    assert cr.main(["--current", cur, "--baseline", base,
+                    "--metrics", str(log)]) == 0
+    # a log missing the quality records fails the gate
+    log2 = tmp_path / "run2.jsonl"
+    reg = MetricsRegistry(str(log2), print_events=False)
+    reg.emit("run_meta", run="train.loop", config={})
+    reg.timer("phase.step").record(0.01)
+    reg.emit("epoch", epoch=0, duration_s=1.0, **reg.summary())
+    reg.close()
+    assert cr.main(["--current", cur, "--baseline", base,
+                    "--metrics", str(log2)]) == 1
+    assert "quality" in capsys.readouterr().err
+    # a corrupted log fails with the offending line
+    log3 = tmp_path / "run3.jsonl"
+    log3.write_text('{"kind": "event"}\n')
+    assert cr.main(["--current", cur, "--baseline", base,
+                    "--metrics", str(log3)]) == 1
+
+
+def test_check_regression_unusable_inputs_exit_2(tmp_path):
+    import check_regression as cr
+    cur = _bench(tmp_path, "cur.json", BASE_ROWS)
+    assert cr.main(["--current", cur,
+                    "--baseline", str(tmp_path / "missing.json")]) == 2
+    bad = tmp_path / "bad.json"
+    bad.write_text("[1, 2, 3]")
+    assert cr.main(["--current", str(bad), "--baseline", cur]) == 2
