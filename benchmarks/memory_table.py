@@ -3,8 +3,20 @@ MNIST logreg) while GraB keeps O(d) (three d-vectors). Exact accounting for
 the paper's tasks + the assigned LM architectures at microbatch granularity.
 
 CSV rows: task,d,n_units,greedy_bytes,grab_bytes,ratio.
+
+Second table — the *host ordering* side of the same story: serving an epoch
+order used to materialize an O(n) int64 index array per policy (and, before
+the loader fix, one per *microbatch*). PRP-backed policies (RR/SO/FlipFlop)
+now answer ``order_at`` from a Feistel network keyed on (seed, epoch):
+O(1) bytes regardless of n. GraB's learned sigma is inherently O(n) state —
+the table shows both, at the paper's scale and at the million-example scale
+the ROADMAP targets.
+
+CSV rows: policy,n_units,materialized_bytes,random_access_bytes,ratio.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.utils.tree import param_count
@@ -15,6 +27,20 @@ def row(task, d, n):
     greedy = n * d * 4                 # stored f32 stale gradients
     grab = 3 * d * 4                   # s, m_prev, m_acc
     return task, d, n, greedy, grab, greedy / grab
+
+
+def prp_bytes() -> int:
+    """Actual resident size of a FeistelPRP's serving state: the round keys
+    plus the two domain constants — independent of n."""
+    from repro.data.prp import FeistelPRP
+    prp = FeistelPRP(1_000_000)
+    return (prp._keys.nbytes + np.dtype(np.uint64).itemsize * 2)
+
+
+def ordering_row(policy, n, stateless):
+    materialized = n * 8               # int64 sigma the old path held per epoch
+    access = prp_bytes() if stateless else n * 8
+    return policy, n, materialized, access, materialized / access
 
 
 def main(argv=None):
@@ -32,6 +58,15 @@ def main(argv=None):
         rows.append(row(f"{arch}-train_4k", d, 1024))         # microbatches/epoch
     for t, d, n, g, b, r in rows:
         print(f"{t},{d},{n},{g},{b},{r:.1f}")
+
+    print()
+    print("policy,n_units,materialized_bytes,random_access_bytes,ratio")
+    orows = []
+    for n in (60_000 // 32, 1024, 1_000_000):
+        orows.append(ordering_row("rr-prp", n, stateless=True))
+        orows.append(ordering_row("grab-sigma", n, stateless=False))
+    for p, n, m, a, r in orows:
+        print(f"{p},{n},{m},{a},{r:.1f}")
 
 
 if __name__ == "__main__":

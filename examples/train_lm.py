@@ -63,6 +63,14 @@ def main():
                          "intra-host stage (0 = flat single-stage gather)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--export-order", default=None, metavar="PATH.npy",
+                    help="after training, save the final learned order "
+                         "(e.g. GraB's last sigma) as a portable .npy "
+                         "permutation artifact")
+    ap.add_argument("--fixed-order", default=None, metavar="PATH.npy",
+                    help="replay a frozen permutation artifact (written by "
+                         "--export-order) every epoch — overrides "
+                         "--ordering; the retrain-from-GraB ablation path")
     ap.add_argument("--metrics-out", default=None,
                     help="write the structured run log (schema-validated "
                          "JSONL: run_meta + per-epoch timers/quality "
@@ -96,11 +104,13 @@ def main():
                       ordering=args.ordering, workers=args.workers,
                       sign_wire=args.sign_wire, sign_hier=args.sign_hier,
                       ckpt_dir=args.ckpt_dir, log_every=10, mesh=mesh,
+                      export_order=args.export_order,
+                      fixed_order=args.fixed_order,
                       metrics_out=args.metrics_out,
                       profile_steps=args.profile_steps,
                       profile_dir=args.profile_dir)
     grab_cfg = None
-    if args.ordering in ("grab", "cd-grab"):
+    if args.ordering in ("grab", "cd-grab") and not args.fixed_order:
         grab_cfg = GrabConfig(pair_balance=args.ordering == "cd-grab",
                               sketch_dim=min(args.sketch_dim, n_params),
                               sign_wire=args.sign_wire,

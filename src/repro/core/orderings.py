@@ -3,6 +3,15 @@
 Everything here is deterministic numpy on the host; the device only ever sees
 integer index arrays. That keeps ordering checkpointable and lets a restarted
 host rebuild its data stream from (seed, epoch, step, sigma) alone.
+
+Orderings are **random-access**: the loader addresses position ``step`` of an
+epoch through ``order_at`` / ``order_slice`` (backed by a per-epoch
+:class:`~repro.data.prp.PermutationView`), never by re-materializing the full
+permutation per step. Stateless policies (RR / SO / FlipFlop) serve a
+counter-keyed Feistel PRP — O(1) memory for any n; stateful policies (GraB
+family, fixed) serve a view over their sigma, materialized at most once per
+epoch. A learned order is a portable artifact: ``save_order`` writes the
+``.npy`` permutation and ``FixedOrder.load`` replays it.
 """
 from __future__ import annotations
 
@@ -13,10 +22,20 @@ import numpy as np
 
 from repro.core.grab import expand_pair_signs
 from repro.core.herding import reorder_from_signs
+from repro.data.prp import (FeistelPRP, MaterializedPermutation,
+                            PermutationView, ReversedPermutation)
 
 
 class OrderPolicy:
-    """Base: yields a permutation of [0, n) for each epoch."""
+    """Base: yields a permutation of [0, n) for each epoch.
+
+    Subclasses implement either ``epoch_order`` (materialized sigma — the
+    default ``_make_view`` wraps it) or ``_make_view`` directly (stateless
+    PRP-backed policies, which then serve ``epoch_order`` *from* the view).
+    ``epoch_view`` caches one view per epoch, so the loader hot path costs at
+    most one materialization per epoch for stateful policies and zero for
+    PRP-backed ones; any sigma mutation must call ``_invalidate_view``.
+    """
 
     def __init__(self, n: int, seed: int = 0):
         self.n = int(n)
@@ -24,6 +43,41 @@ class OrderPolicy:
 
     def epoch_order(self, epoch: int) -> np.ndarray:
         raise NotImplementedError
+
+    # -- random-access serving (the loader's only entry points) ------------
+    def _make_view(self, epoch: int) -> PermutationView:
+        return MaterializedPermutation(self.epoch_order(epoch))
+
+    def epoch_view(self, epoch: int) -> PermutationView:
+        """This epoch's permutation as an O(1) random-access view (cached:
+        one ``_make_view`` per epoch until invalidated)."""
+        cache = getattr(self, "_order_view_cache", None)
+        if cache is not None and cache[0] == epoch:
+            return cache[1]
+        view = self._make_view(epoch)
+        self._order_view_cache = (epoch, view)
+        return view
+
+    def _invalidate_view(self) -> None:
+        self._order_view_cache = None
+
+    def order_at(self, epoch: int, step: int) -> int:
+        """Position ``step`` of epoch ``epoch``'s ordering."""
+        return self.epoch_view(epoch).at(step)
+
+    def order_slice(self, epoch: int, lo: int, hi: int) -> np.ndarray:
+        """Positions ``[lo, hi)`` of epoch ``epoch``'s ordering (int64)."""
+        return self.epoch_view(epoch).slice(lo, hi)
+
+    # -- portable permutation artifacts ------------------------------------
+    def save_order(self, path: str, epoch: int = 0) -> str:
+        """Export epoch ``epoch``'s full permutation as a ``.npy`` artifact
+        (int64). For GraB-family policies the epoch argument is moot — the
+        current learned sigma is written — so ``save_order(path, epochs)``
+        after training captures the final learned order for retrain
+        ablations (load it back with :meth:`FixedOrder.load`)."""
+        np.save(path, self.epoch_view(epoch).materialize())
+        return path
 
     # GraB hook points (no-ops for static policies).
     # apply_epoch_signs is the live loop's entry: one call per epoch with the
@@ -65,36 +119,64 @@ class OrderPolicy:
 
 
 class RandomReshuffling(OrderPolicy):
-    """RR: fresh uniform permutation every epoch (counter-based, stateless)."""
+    """RR: fresh uniform permutation every epoch — served by a stateless
+    Feistel PRP keyed on ``(seed, epoch)``. ``order_at`` is O(1) memory;
+    ``epoch_order`` materializes from the same PRP (bit-identical stream)."""
+
+    def _make_view(self, epoch: int) -> PermutationView:
+        return FeistelPRP(self.n, seed=self.seed, epoch=epoch)
 
     def epoch_order(self, epoch: int) -> np.ndarray:
-        rng = np.random.default_rng((self.seed, epoch))
-        return rng.permutation(self.n)
+        return self.epoch_view(epoch).materialize()
 
 
 class ShuffleOnce(OrderPolicy):
-    """SO: one random permutation, reused every epoch."""
+    """SO: one random permutation, reused every epoch (PRP epoch key 0)."""
+
+    def _make_view(self, epoch: int) -> PermutationView:
+        return FeistelPRP(self.n, seed=self.seed, epoch=0)
 
     def epoch_order(self, epoch: int) -> np.ndarray:
-        rng = np.random.default_rng((self.seed, 0))
-        return rng.permutation(self.n)
+        return self.epoch_view(epoch).materialize()
 
 
 class FlipFlop(OrderPolicy):
-    """FlipFlop [Rajput et al. 2021]: reshuffle on even epochs, reverse on odd."""
+    """FlipFlop [Rajput et al. 2021]: reshuffle on even epochs, reverse on
+    odd — a PRP per epoch *pair*, read backwards (lazily) on odd epochs."""
+
+    def _make_view(self, epoch: int) -> PermutationView:
+        prp = FeistelPRP(self.n, seed=self.seed, epoch=epoch // 2)
+        return prp if epoch % 2 == 0 else ReversedPermutation(prp)
 
     def epoch_order(self, epoch: int) -> np.ndarray:
-        rng = np.random.default_rng((self.seed, epoch // 2))
-        perm = rng.permutation(self.n)
-        return perm if epoch % 2 == 0 else perm[::-1].copy()
+        return self.epoch_view(epoch).materialize()
 
 
 class FixedOrder(OrderPolicy):
-    """A fixed permutation (for the paper's 1-step-GraB / retrain ablations)."""
+    """A fixed permutation (for the paper's 1-step-GraB / retrain ablations),
+    in-memory or loaded from a ``save_order`` ``.npy`` artifact."""
 
     def __init__(self, sigma: np.ndarray):
         super().__init__(len(sigma))
         self.sigma = np.asarray(sigma, dtype=np.int64)
+
+    @classmethod
+    def load(cls, path: str) -> "FixedOrder":
+        """Import a permutation artifact (``.npy``), validating it is an
+        actual permutation of ``range(n)`` — a truncated or non-permutation
+        file would silently drop/duplicate training examples."""
+        sigma = np.load(path)
+        if sigma.ndim != 1 or not np.issubdtype(sigma.dtype, np.integer):
+            raise ValueError(
+                f"order artifact {path!r} holds a {sigma.dtype} array of "
+                f"shape {sigma.shape}; expected a 1-D integer permutation "
+                f"(written by OrderPolicy.save_order)")
+        if not np.array_equal(np.sort(sigma), np.arange(sigma.shape[0])):
+            raise ValueError(
+                f"order artifact {path!r} is not a permutation of "
+                f"range({sigma.shape[0]}): some index is missing or "
+                f"duplicated")
+        return cls(sigma)
 
     def epoch_order(self, epoch: int) -> np.ndarray:
         return self.sigma
@@ -135,6 +217,7 @@ class GrabOrder(OrderPolicy):
         signs = np.asarray(signs).reshape(-1)
         assert signs.shape[0] == self.n, (signs.shape, self.n)
         self.sigma = reorder_from_signs(self.sigma, signs)
+        self._invalidate_view()
 
     def discard_pending(self) -> None:
         self._pending = []
@@ -146,11 +229,35 @@ class GrabOrder(OrderPolicy):
                 "pair": int(self.pair), "pending": pending}
 
     def load_state_dict(self, d: dict) -> None:
-        self.sigma = np.asarray(d["sigma"], dtype=np.int64)
+        """Restore (sigma, pending) — validating sigma against this policy's
+        ``n`` first (mirror of ``ParallelGrabOrder``'s restore validation).
+        A silently accepted wrong-sized sigma only blows up at the *next*
+        epoch boundary (``record_signs`` asserts against n) after a full
+        epoch trained on a corrupt order; a float sigma would silently
+        truncate indices. Fail at restore time instead."""
+        sigma = np.asarray(d["sigma"])
+        if sigma.ndim != 1 or not np.issubdtype(sigma.dtype, np.integer):
+            raise ValueError(
+                f"checkpoint order state has sigma of dtype {sigma.dtype} "
+                f"and shape {sigma.shape} (order-state/config mismatch — "
+                f"expected a 1-D integer permutation of [0, {self.n}))")
+        if sigma.shape[0] != self.n:
+            raise ValueError(
+                f"checkpoint order state permutes {sigma.shape[0]} units, "
+                f"policy orders n={self.n} (order-state/config mismatch — "
+                f"e.g. a checkpoint from a different dataset or microbatch "
+                f"size; sigma must be a permutation of [0, {self.n}))")
+        if not np.array_equal(np.sort(sigma), np.arange(self.n)):
+            raise ValueError(
+                f"checkpoint order state's sigma is not a permutation of "
+                f"range({self.n}) (order-state/config mismatch — some "
+                f"index is missing or duplicated)")
+        self.sigma = sigma.astype(np.int64)
         if "pair" in d:
             self.pair = bool(d["pair"])
         pending = np.asarray(d.get("pending", []))
         self._pending = [pending] if pending.size else []
+        self._invalidate_view()
 
 
 class ParallelGrabOrder(OrderPolicy):
@@ -213,6 +320,7 @@ class ParallelGrabOrder(OrderPolicy):
         owner = balanced // self.m
         self.sigmas = np.stack([balanced[owner == w]
                                 for w in range(self.workers)])
+        self._invalidate_view()
 
     def discard_pending(self) -> None:
         self._pending = []
@@ -256,6 +364,7 @@ class ParallelGrabOrder(OrderPolicy):
         pending = np.asarray(d.get("pending", []))
         self._pending = ([pending.reshape(-1, self.workers)]
                          if pending.size else [])
+        self._invalidate_view()
 
 
 def make_policy(name: str, n: int, seed: int = 0, **kw) -> OrderPolicy:
@@ -271,4 +380,17 @@ def make_policy(name: str, n: int, seed: int = 0, **kw) -> OrderPolicy:
     if name in ("cd-grab", "cd_grab", "cdgrab"):
         return ParallelGrabOrder(n, workers=int(kw.get("workers", 1)),
                                  seed=seed)
+    if name == "fixed":
+        if "path" in kw:
+            policy = FixedOrder.load(kw["path"])
+        elif "sigma" in kw:
+            policy = FixedOrder(kw["sigma"])
+        else:
+            raise ValueError("fixed ordering needs sigma= or path= "
+                             "(a save_order .npy artifact)")
+        if policy.n != n:
+            raise ValueError(
+                f"fixed order permutes {policy.n} units, run orders n={n} "
+                f"(artifact from a different dataset or microbatch size)")
+        return policy
     raise ValueError(f"unknown ordering policy {name!r}")

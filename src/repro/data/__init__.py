@@ -1,2 +1,4 @@
 from repro.data.synthetic import SyntheticTextDataset, synthetic_classification
 from repro.data.loader import PermutedLoader
+from repro.data.prp import (FeistelPRP, MaterializedPermutation,
+                            PermutationView, ReversedPermutation)

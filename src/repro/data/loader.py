@@ -20,11 +20,12 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import numpy as np
 
-from repro.core.orderings import OrderPolicy
+if TYPE_CHECKING:   # runtime import would cycle: orderings -> data.prp -> here
+    from repro.core.orderings import OrderPolicy
 
 
 class PermutedLoader:
@@ -54,14 +55,30 @@ class PermutedLoader:
         self.n_micro = len(dataset) // micro_size
         assert self.policy.n == self.n_micro, \
             f"policy orders {self.policy.n} units, loader has {self.n_micro}"
+        if micro_size % n_hosts != 0:
+            # idx[host_id::n_hosts] would hand ceil/floor(micro/H) rows to
+            # different hosts — per-host batch shapes diverge and the jitted
+            # step recompiles (or cross-host collectives deadlock on
+            # mismatched shapes). Fail here with the fix, not at dispatch.
+            raise ValueError(
+                f"micro_size={micro_size} does not divide over "
+                f"n_hosts={n_hosts}: hosts would load "
+                f"{-(-micro_size // n_hosts)} vs {micro_size // n_hosts} "
+                f"rows per microbatch and jit shapes diverge cross-host — "
+                f"pick a microbatch size that is a multiple of the host "
+                f"count (or shrink the host count)")
         self.host_id, self.n_hosts = host_id, n_hosts
         self.prefetch = prefetch
         self.metrics = metrics
 
     def micro_indices(self, epoch: int, step: int) -> np.ndarray:
-        """Example indices for global microbatch `step` of `epoch`."""
-        sigma = self.policy.epoch_order(epoch)
-        m = sigma[step]
+        """Example indices for global microbatch `step` of `epoch`.
+
+        Random access through the policy's per-epoch view: O(1) for
+        PRP-backed policies, and at most ONE ``epoch_order``
+        materialization per epoch for stateful ones (the view is cached on
+        the policy) — never a fresh O(n) permutation per microbatch."""
+        m = self.policy.order_at(epoch, step)
         return np.arange(m * self.micro, (m + 1) * self.micro)
 
     def load_micro(self, epoch: int, step: int) -> dict:

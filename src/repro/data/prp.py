@@ -1,0 +1,179 @@
+"""Stateless pseudo-random permutations + the random-access ordering view.
+
+The data layer's scaling contract (ROADMAP "stateless permutations for
+million-example datasets"): an epoch ordering must be addressable at O(1)
+memory — ``order_at(epoch, step)`` without materializing the O(n) index
+array. Two families serve that contract:
+
+* :class:`FeistelPRP` — a bijective pseudo-random permutation over
+  ``[0, n)`` built from a balanced Feistel network with cycle-walking
+  (levanter's ``_prp`` construction). Keys derive counter-style from
+  ``(seed, epoch)``, so any ``(seed, epoch, step)`` triple maps to its
+  index in O(rounds) integer ops with zero per-epoch state — a restarted
+  host reconstructs any point of its stream from scalars alone. This backs
+  the stateless policies (RR / SO / FlipFlop).
+* :class:`MaterializedPermutation` — a view over an explicit sigma array,
+  for the policies whose order is *learned* state (GraB's reordered sigma
+  is inherently O(n); the point is to stop re-materializing it per step,
+  not to pretend it is stateless).
+
+Both implement the :class:`PermutationView` protocol the loader consumes:
+``at`` / ``slice`` / ``materialize`` over a fixed ``n``.
+
+Feistel construction: the domain ``[0, n)`` embeds in ``[0, 4^h)`` where
+``h`` is the smallest half-width with ``4^h >= n``; each round splits an
+index into ``(L, R)`` halves and applies ``(L, R) -> (R, L ^ F(R, key))``
+with a splitmix64 round function. The full-domain map is a bijection by
+construction; indices landing outside ``[0, n)`` are re-encrypted until
+they fall inside (cycle-walking — terminates because the walk follows a
+finite cycle of a permutation, and inverts exactly because every skipped
+element of the cycle is also outside ``[0, n)``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_U64 = np.uint64
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer, vectorized over uint64 (wraps mod 2^64)."""
+    x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
+    return x ^ (x >> _U64(31))
+
+
+class PermutationView:
+    """Protocol: O(1) random access into one epoch's permutation of [0, n).
+
+    ``at(i)`` is position ``i`` of the ordering; ``slice(lo, hi)`` is the
+    contiguous block ``[lo, hi)`` as int64; ``materialize()`` is the full
+    array (only for callers that genuinely need all n — the loader never
+    does). Views are immutable: a policy whose sigma changes serves a fresh
+    view next epoch.
+    """
+
+    n: int
+
+    def at(self, i: int) -> int:
+        raise NotImplementedError
+
+    def slice(self, lo: int, hi: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def materialize(self) -> np.ndarray:
+        return self.slice(0, self.n)
+
+    def __len__(self) -> int:
+        return self.n
+
+    def _check_range(self, lo: int, hi: int) -> None:
+        if not 0 <= lo <= hi <= self.n:
+            raise IndexError(
+                f"permutation slice [{lo}, {hi}) out of range for n={self.n}")
+
+
+class FeistelPRP(PermutationView):
+    """Bijective PRP over ``[0, n)``: 4-round balanced Feistel network with
+    cycle-walking, keyed from ``(seed, epoch)`` via a SeedSequence counter.
+
+    O(1) memory (``rounds`` uint64 round keys), O(rounds) amortized compute
+    per index, vectorized over numpy arrays. ``inverse`` recovers the
+    position of a value (cycle-walking backwards through the same network).
+    """
+
+    def __init__(self, n: int, seed: int = 0, epoch: int = 0,
+                 rounds: int = 4):
+        if n <= 0:
+            raise ValueError(f"FeistelPRP domain must be positive, got n={n}")
+        if rounds < 1:
+            raise ValueError(f"FeistelPRP needs >= 1 round, got {rounds}")
+        self.n = int(n)
+        self.seed, self.epoch = int(seed), int(epoch)
+        bits = max(2, (self.n - 1).bit_length())
+        bits += bits & 1                       # even split: domain = 4^h >= n
+        self._half = _U64(bits // 2)
+        self._mask = _U64((1 << (bits // 2)) - 1)
+        ss = np.random.SeedSequence(
+            (self.seed & 0xFFFFFFFFFFFFFFFF, self.epoch & 0xFFFFFFFFFFFFFFFF))
+        self._keys = ss.generate_state(rounds, np.uint64)
+
+    # -- full-domain bijection ---------------------------------------------
+    def _encrypt(self, x: np.ndarray) -> np.ndarray:
+        half, mask = self._half, self._mask
+        left, right = x >> half, x & mask
+        for k in self._keys:
+            left, right = right, left ^ (_mix64(right ^ k) & mask)
+        return (left << half) | right
+
+    def _decrypt(self, y: np.ndarray) -> np.ndarray:
+        half, mask = self._half, self._mask
+        left, right = y >> half, y & mask
+        for k in self._keys[::-1]:
+            left, right = right ^ (_mix64(left ^ k) & mask), left
+        return (left << half) | right
+
+    def _walk(self, idx: np.ndarray, forward: bool) -> np.ndarray:
+        step = self._encrypt if forward else self._decrypt
+        out = step(np.ascontiguousarray(idx, dtype=np.uint64))
+        outside = out >= self.n
+        while outside.any():
+            out[outside] = step(out[outside])
+            outside = out >= self.n
+        return out.astype(np.int64)
+
+    # -- PermutationView ----------------------------------------------------
+    def at(self, i: int) -> int:
+        if not 0 <= i < self.n:
+            raise IndexError(f"position {i} out of range for n={self.n}")
+        return int(self._walk(np.asarray([i]), forward=True)[0])
+
+    def slice(self, lo: int, hi: int) -> np.ndarray:
+        self._check_range(lo, hi)
+        return self._walk(np.arange(lo, hi, dtype=np.uint64), forward=True)
+
+    def inverse(self, values) -> np.ndarray:
+        """Positions at which ``values`` appear: ``inverse(slice(0, n))``
+        is ``arange(n)``."""
+        values = np.asarray(values)
+        if values.size and (values.min() < 0 or values.max() >= self.n):
+            raise IndexError(f"values out of range for n={self.n}")
+        return self._walk(values, forward=False)
+
+
+class MaterializedPermutation(PermutationView):
+    """View over an explicit sigma array (learned / predefined orders)."""
+
+    def __init__(self, sigma: np.ndarray):
+        self.sigma = np.asarray(sigma, dtype=np.int64).reshape(-1)
+        self.n = int(self.sigma.shape[0])
+
+    def at(self, i: int) -> int:
+        if not 0 <= i < self.n:
+            raise IndexError(f"position {i} out of range for n={self.n}")
+        return int(self.sigma[i])
+
+    def slice(self, lo: int, hi: int) -> np.ndarray:
+        self._check_range(lo, hi)
+        return self.sigma[lo:hi]
+
+    def materialize(self) -> np.ndarray:
+        return self.sigma
+
+
+class ReversedPermutation(PermutationView):
+    """Lazy reversal of another view (FlipFlop's odd epochs) — O(1) on top
+    of the base view, position i reads base position n-1-i."""
+
+    def __init__(self, base: PermutationView):
+        self.base = base
+        self.n = base.n
+
+    def at(self, i: int) -> int:
+        if not 0 <= i < self.n:
+            raise IndexError(f"position {i} out of range for n={self.n}")
+        return self.base.at(self.n - 1 - i)
+
+    def slice(self, lo: int, hi: int) -> np.ndarray:
+        self._check_range(lo, hi)
+        return self.base.slice(self.n - hi, self.n - lo)[::-1].copy()

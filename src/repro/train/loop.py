@@ -68,6 +68,16 @@ class LoopConfig:
     keep_ckpts: int = 3
     log_every: int = 50
     seed: int = 0
+    # --- portable permutation artifacts ------------------------------------
+    export_order: Optional[str] = None   # after training, save the final
+    #                               learned order (the permutation the next
+    #                               epoch would use) as a .npy artifact —
+    #                               replay it with fixed_order for the
+    #                               paper's retrain-from-GraB ablation
+    fixed_order: Optional[str] = None    # path to a save_order .npy: replay
+    #                               that frozen permutation every epoch
+    #                               (overrides `ordering`; GraB reordering
+    #                               is disabled — the artifact IS the order)
     # --- launcher path (see launch.live) -----------------------------------
     mesh: Any = None              # jax Mesh: jit with explicit in_shardings,
     #                               donate the state, apply the cd-grab
@@ -103,8 +113,10 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
         (n_micro_total, loop_cfg.n_micro)
     steps_per_epoch = n_micro_total // loop_cfg.n_micro
 
-    cd_grab = loop_cfg.ordering in ("cd-grab", "cd_grab", "cdgrab")
-    use_grab = loop_cfg.ordering == "grab" or cd_grab
+    fixed = loop_cfg.fixed_order is not None
+    cd_grab = (loop_cfg.ordering in ("cd-grab", "cd_grab", "cdgrab")
+               and not fixed)
+    use_grab = (loop_cfg.ordering == "grab" or cd_grab) and not fixed
     n_workers = loop_cfg.workers if cd_grab else 1
     if use_grab and grab_cfg is None:
         grab_cfg = GrabConfig(pair_balance=cd_grab)
@@ -127,13 +139,19 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
         assert (n_micro_total // n_workers) % 2 == 0, \
             "pair balancing needs an even per-worker stream"
 
-    policy_kw = {}
-    if cd_grab:
-        policy_kw["workers"] = n_workers
-    elif use_grab:
-        policy_kw["pair"] = grab_cfg.pair_balance
-    policy: OrderPolicy = make_policy(loop_cfg.ordering, n_micro_total,
-                                      seed=loop_cfg.seed, **policy_kw)
+    if fixed:
+        # replay a frozen permutation artifact: validates the file is a real
+        # permutation and sized for THIS run's microbatch stream
+        policy: OrderPolicy = make_policy("fixed", n_micro_total,
+                                          path=loop_cfg.fixed_order)
+    else:
+        policy_kw = {}
+        if cd_grab:
+            policy_kw["workers"] = n_workers
+        elif use_grab:
+            policy_kw["pair"] = grab_cfg.pair_balance
+        policy = make_policy(loop_cfg.ordering, n_micro_total,
+                             seed=loop_cfg.seed, **policy_kw)
 
     # --- telemetry: registry + run metadata + profiler window --------------
     own_reg = loop_cfg.metrics is None
@@ -142,7 +160,10 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
     profiler = ProfileWindow(loop_cfg.profile_steps, loop_cfg.profile_dir,
                              reg=reg)
     run_meta = {
-        "ordering": loop_cfg.ordering, "workers": n_workers,
+        "ordering": "fixed" if fixed else loop_cfg.ordering,
+        "fixed_order": loop_cfg.fixed_order,
+        "export_order": loop_cfg.export_order,
+        "workers": n_workers,
         "epochs": loop_cfg.epochs, "steps_per_epoch": steps_per_epoch,
         "n_micro": loop_cfg.n_micro, "micro_size": micro_size,
         "n_examples": len(dataset), "seed": loop_cfg.seed,
@@ -326,6 +347,13 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
             reg.event(f"[loop] epoch {epoch} done in {dt:.1f}s "
                       f"mean loss {loss_txt}", epoch=epoch)
     flush_losses()
+    if loop_cfg.export_order:
+        # the order the NEXT epoch would use: for GraB-family policies this
+        # is the final learned sigma — the portable artifact the
+        # retrain-from-GraB ablation replays via fixed_order
+        policy.save_order(loop_cfg.export_order, epoch=loop_cfg.epochs)
+        reg.event(f"[loop] exported order artifact "
+                  f"({policy.n} units) to {loop_cfg.export_order}")
     if manager:
         manager.wait()
     profiler.close()

@@ -191,6 +191,64 @@ def test_loader_without_metrics_unchanged():
     assert [s for s, _ in loader.epoch(0)] == list(range(8))
 
 
+def test_loader_materializes_stateful_order_at_most_once_per_epoch():
+    """The O(n^2) regression guard: `micro_indices` for every step of an
+    epoch must trigger at most ONE `epoch_order` materialization for a
+    stateful policy — not one fresh O(n) permutation per microbatch."""
+    ds = SyntheticTextDataset(32, 8, 64, seed=0)
+    policy = make_policy("grab", 8, seed=0)
+    calls = []
+    orig = policy.epoch_order
+    policy.epoch_order = lambda e: (calls.append(e), orig(e))[1]
+    loader = PermutedLoader(ds, policy, 4)
+    for epoch in range(3):
+        for s in range(8):
+            loader.micro_indices(epoch, s)
+        assert len([e for e in calls if e == epoch]) <= 1, calls
+    # the full prefetching path obeys the same budget
+    calls.clear()
+    list(loader.epoch(3))
+    assert len(calls) <= 1, calls
+
+
+def test_loader_never_materializes_prp_backed_orders():
+    """PRP-backed policies (RR/SO/FlipFlop) serve the loader hot path with
+    ZERO O(n) materializations — `epoch_order` is never called — and the
+    random-access stream is bit-identical to the materialized original."""
+    ds = SyntheticTextDataset(32, 8, 64, seed=0)
+    for name in ("rr", "so", "flipflop"):
+        reference = make_policy(name, 8, seed=0)
+        sigmas = {e: reference.epoch_order(e) for e in range(2)}
+
+        policy = make_policy(name, 8, seed=0)
+
+        def boom(epoch):
+            raise AssertionError(
+                f"epoch_order materialized on the loader hot path ({name})")
+
+        policy.epoch_order = boom
+        loader = PermutedLoader(ds, policy, 4)
+        for epoch in range(2):
+            micros = np.stack([loader.micro_indices(epoch, s)
+                               for s in range(8)])
+            np.testing.assert_array_equal(micros[:, 0] // 4, sigmas[epoch])
+            for s, _ in loader.epoch(epoch):
+                pass
+
+
+def test_loader_rejects_uneven_host_sharding():
+    """micro_size % n_hosts != 0 hands different row counts to different
+    hosts (`idx[h::H]`) and jit shapes diverge cross-host — must fail at
+    construction with the fix in the message, not at dispatch."""
+    ds = SyntheticTextDataset(30, 8, 64, seed=0)
+    policy = make_policy("so", 6, seed=0)
+    with pytest.raises(ValueError, match="diverge cross-host"):
+        PermutedLoader(ds, policy, 5, host_id=0, n_hosts=3)
+    # even splits keep working, any host id
+    for h in range(5):
+        PermutedLoader(ds, policy, 5, host_id=h, n_hosts=5)
+
+
 @settings(max_examples=10, deadline=None)
 @given(n=st.sampled_from([8, 16, 32]), micro=st.sampled_from([2, 4, 8]),
        epoch=st.integers(0, 3))

@@ -1,0 +1,100 @@
+"""Portable permutation artifacts through the real training loop.
+
+The GraB-sampler use case (PAPERS.md): train with GraB, export the learned
+order as a ``.npy`` artifact, and replay it in a *fresh* run as a frozen
+``FixedOrder`` — the retrain ablation. The round trip must be exact: the
+replayed run's data stream (and therefore its loss trace) is bit-equal to a
+run driven by the in-memory sigma.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core.orderings import FixedOrder
+from repro.data.synthetic import synthetic_classification
+from repro.models.paper_models import logreg_init, logreg_loss
+from repro.optim import constant, sgdm
+from repro.train import LoopConfig, run_training
+
+
+class ClsDataset:
+    def __init__(self, x, y):
+        self.x, self.y = x, y
+
+    def __len__(self):
+        return len(self.x)
+
+    def batch(self, idx):
+        return {"x": self.x[idx], "y": self.y[idx]}
+
+
+def _setup(n=64, d=8):
+    x, y = synthetic_classification(n, d, seed=0)
+    params = logreg_init(jax.random.PRNGKey(0), d, 10)
+    loss_fn = lambda p, mb: (logreg_loss(p, mb), {})
+    return ClsDataset(x, y), params, loss_fn
+
+
+def _losses(hist, epoch=0):
+    return [h["loss"] for h in hist if h["epoch"] == epoch]
+
+
+def test_export_then_fixed_order_retrain_is_bit_exact(tmp_path):
+    ds, params, loss_fn = _setup()
+    path = str(tmp_path / "grab_sigma.npy")
+
+    # 1. GraB run exports its final learned order
+    cfg = LoopConfig(epochs=2, n_micro=4, ordering="grab", log_every=0,
+                     export_order=path)
+    run_training(loss_fn, params, sgdm(0.9), constant(0.05), ds, 4, cfg)
+    sigma = np.load(path)
+    assert np.array_equal(np.sort(sigma), np.arange(16))
+
+    # 2. replay the artifact via LoopConfig.fixed_order vs the in-memory
+    #    sigma through make_policy("fixed"): same stream -> bit-equal losses
+    cfg_artifact = LoopConfig(epochs=2, n_micro=4, ordering="rr",
+                              log_every=0, fixed_order=path)
+    _, hist_artifact = run_training(loss_fn, params, sgdm(0.9),
+                                    constant(0.05), ds, 4, cfg_artifact)
+
+    import repro.train.loop as L
+    orig = L.make_policy
+    L.make_policy = lambda name, n, seed=0, **kw: FixedOrder(sigma)
+    try:
+        cfg_mem = LoopConfig(epochs=2, n_micro=4, ordering="so", log_every=0)
+        _, hist_mem = run_training(loss_fn, params, sgdm(0.9),
+                                   constant(0.05), ds, 4, cfg_mem)
+    finally:
+        L.make_policy = orig
+
+    for epoch in range(2):
+        a, b = _losses(hist_artifact, epoch), _losses(hist_mem, epoch)
+        assert a and a == b, (epoch, a, b)
+    # fixed replay really is an epoch-constant stream: both epochs saw the
+    # same sigma, so the artifact run is reproducible end to end
+    _, hist_again = run_training(loss_fn, params, sgdm(0.9), constant(0.05),
+                                 ds, 4, cfg_artifact)
+    assert _losses(hist_artifact, 0) == _losses(hist_again, 0)
+
+
+def test_fixed_order_disables_grab_reordering(tmp_path):
+    """fixed_order overrides a grab `ordering`: the frozen artifact is the
+    order every epoch — no sign buffer reorders sneak in."""
+    ds, params, loss_fn = _setup()
+    path = str(tmp_path / "sigma.npy")
+    np.save(path, np.random.default_rng(3).permutation(16))
+    cfg = LoopConfig(epochs=2, n_micro=4, ordering="grab", log_every=0,
+                     fixed_order=path)
+    _, hist = run_training(loss_fn, params, sgdm(0.9), constant(0.05),
+                           ds, 4, cfg)
+    assert len(_losses(hist, 1)) == 4
+
+
+def test_fixed_order_rejects_wrong_sized_artifact(tmp_path):
+    ds, params, loss_fn = _setup()
+    path = str(tmp_path / "sigma.npy")
+    np.save(path, np.random.default_rng(3).permutation(8))   # 16 needed
+    cfg = LoopConfig(epochs=1, n_micro=4, ordering="so", log_every=0,
+                     fixed_order=path)
+    with pytest.raises(ValueError, match="different dataset"):
+        run_training(loss_fn, params, sgdm(0.9), constant(0.05), ds, 4, cfg)

@@ -86,3 +86,64 @@ def test_cd_grab_restore_rejects_malformed_sigmas():
     q = make_policy("cd-grab", 32, 0, workers=4)
     with pytest.raises(ValueError, match="order-state/config mismatch"):
         q.load_state_dict({"sigmas": np.arange(32), "workers": 4})
+
+
+def test_grab_restore_rejects_wrong_sized_sigma():
+    """Mirror of the ParallelGrabOrder fix: a sigma from a different
+    dataset/microbatch size must fail at restore, not corrupt the reorder
+    arithmetic an epoch later."""
+    state = make_policy("grab", 64, 0).state_dict()
+    q = make_policy("grab", 32, 0)
+    with pytest.raises(ValueError, match="order-state/config mismatch"):
+        q.load_state_dict(state)
+
+
+def test_grab_restore_rejects_bad_dtype_and_non_permutation():
+    q = make_policy("grab", 8, 0)
+    with pytest.raises(ValueError, match="order-state/config mismatch"):
+        q.load_state_dict({"sigma": np.linspace(0, 7, 8)})   # float sigma
+    with pytest.raises(ValueError, match="order-state/config mismatch"):
+        q.load_state_dict({"sigma": np.zeros(8, np.int64)})  # not a perm
+
+
+def test_save_order_fixed_order_roundtrip(tmp_path):
+    """A learned GraB order survives the .npy round trip bit-for-bit and
+    replays as a FixedOrder."""
+    from repro.core.orderings import FixedOrder
+
+    p = make_policy("grab", 16, seed=0)
+    p.record_signs(0, np.random.default_rng(1).choice([-1, 1], 16))
+    path = str(tmp_path / "sigma.npy")
+    assert p.save_order(path, epoch=1) == path
+    fixed = FixedOrder.load(path)
+    np.testing.assert_array_equal(fixed.epoch_order(0), p.epoch_order(1))
+    np.testing.assert_array_equal(fixed.epoch_order(5), p.sigma)
+    # PRP-backed policies export their (stateless) epoch order the same way
+    rr = make_policy("rr", 16, seed=3)
+    rr.save_order(str(tmp_path / "rr.npy"), epoch=2)
+    np.testing.assert_array_equal(
+        FixedOrder.load(str(tmp_path / "rr.npy")).sigma, rr.epoch_order(2))
+
+
+def test_fixed_order_load_rejects_corrupt_artifacts(tmp_path):
+    bad_dtype = str(tmp_path / "f.npy")
+    np.save(bad_dtype, np.linspace(0, 1, 8))
+    with pytest.raises(ValueError, match="integer permutation"):
+        from repro.core.orderings import FixedOrder
+        FixedOrder.load(bad_dtype)
+    not_perm = str(tmp_path / "p.npy")
+    np.save(not_perm, np.array([0, 1, 1, 3]))
+    from repro.core.orderings import FixedOrder
+    with pytest.raises(ValueError, match="not a permutation"):
+        FixedOrder.load(not_perm)
+
+
+def test_make_policy_fixed_validates_length(tmp_path):
+    path = str(tmp_path / "s.npy")
+    np.save(path, np.random.default_rng(0).permutation(16))
+    p = make_policy("fixed", 16, path=path)
+    assert p.n == 16
+    with pytest.raises(ValueError, match="different dataset"):
+        make_policy("fixed", 32, path=path)
+    with pytest.raises(ValueError, match="sigma= or path="):
+        make_policy("fixed", 16)

@@ -1,0 +1,125 @@
+"""Feistel PRP + random-access ordering views.
+
+The contract under test: every ``(n, seed, epoch)`` keys a *bijection* over
+``[0, n)`` (including non-powers-of-two, where cycle-walking does the work),
+random access (``at``/``slice``) is bit-identical to the materialized
+stream, and the PRP-backed policies (RR / SO / FlipFlop) serve exactly the
+same epoch streams through ``order_at``/``order_slice`` as through
+``epoch_order`` — across seeds and epochs, and across fresh policy
+instances (restart safety).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.orderings import make_policy
+from repro.data.prp import (FeistelPRP, MaterializedPermutation,
+                            ReversedPermutation)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**32),
+       epoch=st.integers(0, 50))
+def test_feistel_is_a_permutation_for_every_n(n, seed, epoch):
+    """Bijectivity on arbitrary domains — powers of two get no special
+    treatment, cycle-walking handles the rest."""
+    prp = FeistelPRP(n, seed=seed, epoch=epoch)
+    out = prp.materialize()
+    assert np.array_equal(np.sort(out), np.arange(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 1000), seed=st.integers(0, 2**16),
+       epoch=st.integers(0, 10))
+def test_feistel_inverse_recovers_positions(n, seed, epoch):
+    prp = FeistelPRP(n, seed=seed, epoch=epoch)
+    sigma = prp.materialize()
+    np.testing.assert_array_equal(prp.inverse(sigma), np.arange(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 500), seed=st.integers(0, 2**16))
+def test_feistel_random_access_matches_materialized(n, seed):
+    """`at` and arbitrary `slice` windows agree bit-for-bit with the full
+    array — O(1) access is not a different permutation."""
+    prp = FeistelPRP(n, seed=seed, epoch=3)
+    sigma = prp.materialize()
+    for i in [0, n // 3, n - 1]:
+        assert prp.at(i) == sigma[i]
+    lo, hi = n // 4, 3 * n // 4
+    np.testing.assert_array_equal(prp.slice(lo, hi), sigma[lo:hi])
+
+
+def test_feistel_counter_keying_is_stateless_and_distinct():
+    """Same (seed, epoch) -> same permutation from a fresh object (restart
+    safety); different epoch or seed -> a different permutation."""
+    a = FeistelPRP(256, seed=7, epoch=4).materialize()
+    b = FeistelPRP(256, seed=7, epoch=4).materialize()
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, FeistelPRP(256, seed=7, epoch=5).materialize())
+    assert not np.array_equal(a, FeistelPRP(256, seed=8, epoch=4).materialize())
+
+
+def test_feistel_rejects_bad_domains_and_indices():
+    with pytest.raises(ValueError, match="positive"):
+        FeistelPRP(0)
+    prp = FeistelPRP(16)
+    with pytest.raises(IndexError):
+        prp.at(16)
+    with pytest.raises(IndexError):
+        prp.at(-1)
+    with pytest.raises(IndexError):
+        prp.slice(4, 17)
+
+
+def test_view_wrappers_match_their_base():
+    sigma = FeistelPRP(33, seed=1).materialize()
+    mat = MaterializedPermutation(sigma)
+    assert mat.at(5) == sigma[5]
+    np.testing.assert_array_equal(mat.slice(3, 20), sigma[3:20])
+    rev = ReversedPermutation(mat)
+    np.testing.assert_array_equal(rev.materialize(), sigma[::-1])
+    assert rev.at(0) == sigma[-1]
+    np.testing.assert_array_equal(rev.slice(1, 4), sigma[::-1][1:4])
+
+
+@settings(max_examples=25, deadline=None)
+@given(name=st.sampled_from(["rr", "so", "flipflop"]),
+       n=st.integers(1, 300), seed=st.integers(0, 2**16),
+       epoch=st.integers(0, 6))
+def test_prp_backed_policies_random_access_bit_identical(name, n, seed, epoch):
+    """The whole point of the view protocol: order_at / order_slice streams
+    are bit-identical to the materialized epoch_order, from a FRESH policy
+    instance (no shared state between the two reads)."""
+    materialized = make_policy(name, n, seed).epoch_order(epoch)
+    fresh = make_policy(name, n, seed)
+    stream = np.array([fresh.order_at(epoch, i) for i in range(n)])
+    np.testing.assert_array_equal(stream, materialized)
+    lo, hi = n // 3, 2 * n // 3
+    np.testing.assert_array_equal(
+        make_policy(name, n, seed).order_slice(epoch, lo, hi),
+        materialized[lo:hi])
+
+
+def test_prp_backed_policies_keep_their_semantics():
+    """RR fresh per epoch, SO constant, FlipFlop exact reversal on odd
+    epochs — the PRP backing preserves each policy's defining property."""
+    rr, so, ff = (make_policy(p, 128, 3) for p in ("rr", "so", "flipflop"))
+    assert not np.array_equal(rr.epoch_order(0), rr.epoch_order(1))
+    np.testing.assert_array_equal(so.epoch_order(0), so.epoch_order(9))
+    np.testing.assert_array_equal(ff.epoch_order(1), ff.epoch_order(0)[::-1])
+    # FlipFlop's reversal must hold through random access too
+    assert ff.order_at(1, 0) == ff.order_at(0, 127)
+
+
+def test_stateful_policies_serve_views_over_their_sigma():
+    """GraB-family policies keep their learned-order semantics: the view is
+    just a window onto sigma, and reorders invalidate it."""
+    p = make_policy("grab", 16, seed=0)
+    np.testing.assert_array_equal(
+        p.order_slice(0, 0, 16), p.epoch_order(0))
+    before = p.epoch_order(0).copy()
+    p.record_signs(0, np.random.default_rng(0).choice([-1, 1], 16))
+    # the committed reorder is visible through the view immediately
+    np.testing.assert_array_equal(p.order_slice(0, 0, 16), p.epoch_order(0))
+    assert not np.array_equal(p.epoch_order(0), before)
