@@ -23,7 +23,10 @@ Three checks, each with an actionable failure message:
    not grow past baseline × (1 + tol), and ``wallclock_loop_speedup``
    (sync/async epoch ratio) must not shrink below baseline × (1 − tol).
    Absolute µs rows are compared only under ``--absolute`` (same-box
-   trending).
+   trending). Loader throughput gates the same way: the box-normalized
+   ``loader_prefetch_speedup`` / ``loader_shard_vs_serial`` ratios
+   (``benchmarks/loader_throughput.py``) must not shrink below baseline ×
+   (1 − tol); absolute microbatches/s rows only under ``--absolute``.
 
 Exit 0 on pass, 1 on any failure (CI fails the job), 2 on unusable inputs.
 """
@@ -39,9 +42,16 @@ from repro.obs.schema import (SchemaError, read_jsonl, records_of_kind,
 # row kinds where LOWER is better / HIGHER is better, compared as ratios
 LOWER_BETTER = ("herding",)
 FRAC_LOWER_BETTER = ("wallclock_sign_frac",)
+# box-normalized ratios (dimensionless, cross-machine comparable):
+# loader_prefetch_speedup / loader_shard_vs_serial are the data pipeline's
+# throughput relative to the single-thread serial reference on the SAME box
 RATIO_HIGHER_BETTER = ("wallclock_loop_speedup",)
+LOADER_RATIO_HIGHER_BETTER = ("loader_prefetch_speedup",
+                              "loader_shard_vs_serial")
 ABSOLUTE_LOWER_BETTER = ("wallclock_step_us", "wallclock_sign_us",
                          "wallclock_loop_sync_s", "wallclock_loop_async_s")
+ABSOLUTE_HIGHER_BETTER = ("loader_serial_mbps", "loader_synth_mbps",
+                          "loader_shard_mbps")
 
 
 def load_bench(path: str) -> dict:
@@ -137,9 +147,13 @@ def compare(current: dict, baseline: dict, herding_tol: float,
     ratio_check(LOWER_BETTER, herding_tol, True, "herding-bound regression")
     ratio_check(FRAC_LOWER_BETTER, step_tol, True, "step-time regression")
     ratio_check(RATIO_HIGHER_BETTER, step_tol, False, "step-time regression")
+    ratio_check(LOADER_RATIO_HIGHER_BETTER, step_tol, False,
+                "loader-throughput regression")
     if absolute:
         ratio_check(ABSOLUTE_LOWER_BETTER, step_tol, True,
                     "step-time regression (absolute)")
+        ratio_check(ABSOLUTE_HIGHER_BETTER, step_tol, False,
+                    "loader-throughput regression (absolute)")
     return fails
 
 

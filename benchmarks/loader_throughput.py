@@ -1,0 +1,175 @@
+"""Loader throughput: microbatches/s for the window-prefetching pipeline,
+synthetic vs memmap-shard sources, at 1/2/4 assembly workers.
+
+    PYTHONPATH=src:. python benchmarks/loader_throughput.py [--quick]
+
+The reference arm is the seed-era path: a single thread pulling one
+microbatch at a time through the serial random-access contract
+(``load_micro`` per step — what ``PermutedLoader`` did before the pipeline
+refactor, minus its queue hop). Prefetch arms consume full
+``WindowPrefetcher`` epochs, including the off-thread ``[n_micro, ...]``
+stack assembly.
+
+Rows land in the shared ``repro.obs/v1`` bench schema, merged into
+``BENCH_cd_grab.json`` next to the cd-grab sweep rows so one committed
+baseline file trends everything (``(kind, W, epoch=0, value)``):
+
+* ``loader_serial_mbps``         — W=0: the single-thread reference, µb/s;
+* ``loader_synth_mbps``          — prefetch over the in-memory source at W
+  workers (absolute, box-dependent: gate with ``--absolute`` only);
+* ``loader_shard_mbps``          — prefetch over on-disk memmap shards;
+* ``loader_prefetch_speedup``    — synth prefetch / serial (box-normalized
+  ratio: the pipeline must not be slower than the seed loader);
+* ``loader_shard_vs_serial``     — shard prefetch / serial synth (the
+  acceptance ratio: the real-dataset read path keeps up with in-memory
+  synthesis).
+
+``benchmarks/check_regression.py`` gates the two ratio kinds against the
+committed baseline; ``--min-shard-ratio`` additionally hard-fails this
+process if the shard path falls below the floor (CI uses the regression
+gate; the floor is for local runs without a baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(__file__))           # benchmarks/common
+from common import make_bench_record, write_bench_json  # noqa: E402
+
+from repro.core.orderings import make_policy
+from repro.data.prefetch import WindowPrefetcher
+from repro.data.sources import MemmapShardDataset, write_shards
+from repro.data.synthetic import SyntheticTextDataset
+from repro.obs.schema import validate_record
+
+
+def _mbps(n_micro_total: int, seconds: float) -> float:
+    return n_micro_total / seconds if seconds > 0 else 0.0
+
+
+def _time_serial(source, micro, n_units, epochs, seed) -> float:
+    policy = make_policy("rr", n_units, seed=seed)
+    pf = WindowPrefetcher(source, policy, micro)        # serial path only
+    t0 = time.perf_counter()
+    for epoch in range(epochs):
+        for s in range(n_units):
+            pf.load_micro(epoch, s)
+    return _mbps(n_units * epochs, time.perf_counter() - t0)
+
+
+def _time_prefetch(source, micro, n_units, epochs, seed, workers,
+                   window, n_micro) -> float:
+    policy = make_policy("rr", n_units, seed=seed)
+    pf = WindowPrefetcher(source, policy, micro, n_micro=n_micro,
+                          window=window, workers=workers, buffer=2)
+    t0 = time.perf_counter()
+    for epoch in range(epochs):
+        for _ in pf.iter_epoch(epoch):
+            pass
+    return _mbps(n_units * epochs, time.perf_counter() - t0)
+
+
+def _best(fn, repeats, *args):
+    return max(fn(*args) for _ in range(repeats))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=512, help="corpus examples")
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--micro", type=int, default=8)
+    ap.add_argument("--n-micro", type=int, default=4,
+                    help="microbatches stacked per delivered step")
+    ap.add_argument("--window", type=int, default=4)
+    ap.add_argument("--workers", default="1,2,4")
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--shard-size", type=int, default=0,
+                    help="examples per shard (0 = n/8)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (smaller corpus, 2 repeats)")
+    ap.add_argument("--out", default="BENCH_cd_grab.json",
+                    help="bench JSON to merge loader rows into (created "
+                         "standalone if missing)")
+    ap.add_argument("--min-shard-ratio", type=float, default=0.0,
+                    help="exit nonzero if loader_shard_vs_serial at the "
+                         "best worker count falls below this floor")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.n, args.seq_len, args.epochs, args.repeats = 256, 128, 2, 2
+
+    workers = [int(w) for w in args.workers.split(",")]
+    n_units = args.n // args.micro
+    synth = SyntheticTextDataset(args.n, args.seq_len, args.vocab,
+                                 seed=args.seed)
+    shard_size = args.shard_size or max(1, args.n // 8)
+
+    serial = _best(_time_serial, args.repeats, synth, args.micro, n_units,
+                   args.epochs, args.seed)
+    print(f"[loader_throughput] serial reference: {serial:.1f} µb/s "
+          f"({args.n} x {args.seq_len} tokens, micro={args.micro})")
+    rows = [("loader_serial_mbps", 0, 0, serial)]
+
+    with tempfile.TemporaryDirectory(prefix="loader_bench_shards_") as d:
+        write_shards(synth, d, shard_size=shard_size)
+        shards = MemmapShardDataset(d)
+        shard_ratios = {}
+        for w in workers:
+            synth_v = _best(_time_prefetch, args.repeats, synth, args.micro,
+                            n_units, args.epochs, args.seed, w, args.window,
+                            args.n_micro)
+            shard_v = _best(_time_prefetch, args.repeats, shards, args.micro,
+                            n_units, args.epochs, args.seed, w, args.window,
+                            args.n_micro)
+            rows += [("loader_synth_mbps", w, 0, synth_v),
+                     ("loader_shard_mbps", w, 0, shard_v),
+                     ("loader_prefetch_speedup", w, 0, synth_v / serial),
+                     ("loader_shard_vs_serial", w, 0, shard_v / serial)]
+            shard_ratios[w] = shard_v / serial
+            print(f"[loader_throughput] W={w}: synth {synth_v:.1f} µb/s "
+                  f"({synth_v / serial:.2f}x serial), shards "
+                  f"{shard_v:.1f} µb/s ({shard_v / serial:.2f}x serial)")
+
+    cfg = {"n": args.n, "seq_len": args.seq_len, "vocab": args.vocab,
+           "micro": args.micro, "n_micro": args.n_micro,
+           "window": args.window, "workers": workers,
+           "epochs": args.epochs, "repeats": args.repeats,
+           "shard_size": shard_size, "seed": args.seed}
+
+    if os.path.exists(args.out):
+        # merge into the committed sweep record: one baseline file trends
+        # ordering quality AND loader throughput
+        with open(args.out) as f:
+            rec = json.load(f)
+        rec["rows"] = [r for r in rec.get("rows", [])
+                       if not str(r[0]).startswith("loader_")]
+        rec["rows"] += [list(r) for r in rows]
+        rec.setdefault("config", {})["loader_bench"] = cfg
+        if "schema" in rec:
+            validate_record(rec)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+    else:
+        write_bench_json(args.out, make_bench_record(
+            "loader_throughput", cfg, rows))
+    print(f"[loader_throughput] rows merged into {args.out}")
+
+    best = max(shard_ratios.values())
+    if args.min_shard_ratio and best < args.min_shard_ratio:
+        print(f"[loader_throughput] FAIL: best shard/serial ratio "
+              f"{best:.2f} < floor {args.min_shard_ratio}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

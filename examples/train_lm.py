@@ -15,6 +15,7 @@ import jax
 import numpy as np
 
 from repro.core.grab import GrabConfig
+from repro.data.sources import MemmapShardDataset, write_shards
 from repro.data.synthetic import SyntheticTextDataset
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -61,6 +62,22 @@ def main():
     ap.add_argument("--sign-hier", type=int, default=0,
                     help="two-stage sign gather: group size L for the "
                          "intra-host stage (0 = flat single-stage gather)")
+    ap.add_argument("--data", default="synthetic",
+                    help="data source: 'synthetic' (the preset's in-memory "
+                         "counter-based corpus) or 'shards:<dir>' (on-disk "
+                         "memmap .npy shards written by --write-shards; "
+                         "manifest checksums are validated on open)")
+    ap.add_argument("--write-shards", default=None, metavar="DIR",
+                    help="materialize the preset's synthetic corpus to "
+                         "on-disk .npy shards + manifest in DIR, then exit "
+                         "— train from them with --data shards:DIR")
+    ap.add_argument("--shard-size", type=int, default=None,
+                    help="examples per shard for --write-shards "
+                         "(default: one quarter of the corpus)")
+    ap.add_argument("--loader-workers", type=int, default=2,
+                    help="window-prefetch assembly pool size")
+    ap.add_argument("--loader-window", type=int, default=4,
+                    help="order_slice prefetch horizon, in optimizer steps")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--epochs", type=int, default=None)
     ap.add_argument("--export-order", default=None, metavar="PATH.npy",
@@ -85,7 +102,23 @@ def main():
 
     p = PRESETS[args.preset]
     cfg = p["model"]
-    ds = SyntheticTextDataset(p["n_examples"], p["seq_len"], cfg.vocab, seed=0)
+    if args.write_shards:
+        src = SyntheticTextDataset(p["n_examples"], p["seq_len"], cfg.vocab,
+                                   seed=0)
+        shard = args.shard_size or max(1, len(src) // 4)
+        manifest = write_shards(src, args.write_shards, shard_size=shard)
+        print(f"wrote {len(src)} examples as shards of {shard} to "
+              f"{manifest} — train from them with "
+              f"--data shards:{args.write_shards}")
+        return
+    if args.data.startswith("shards:"):
+        ds = MemmapShardDataset(args.data[len("shards:"):])
+    elif args.data == "synthetic":
+        ds = SyntheticTextDataset(p["n_examples"], p["seq_len"], cfg.vocab,
+                                  seed=0)
+    else:
+        raise SystemExit(f"unknown --data {args.data!r}: expected "
+                         f"'synthetic' or 'shards:<dir>'")
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     mesh = None
@@ -104,6 +137,8 @@ def main():
                       ordering=args.ordering, workers=args.workers,
                       sign_wire=args.sign_wire, sign_hier=args.sign_hier,
                       ckpt_dir=args.ckpt_dir, log_every=10, mesh=mesh,
+                      loader_workers=args.loader_workers,
+                      loader_window=args.loader_window,
                       export_order=args.export_order,
                       fixed_order=args.fixed_order,
                       metrics_out=args.metrics_out,

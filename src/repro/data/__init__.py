@@ -1,4 +1,6 @@
 from repro.data.synthetic import SyntheticTextDataset, synthetic_classification
+from repro.data.sources import (DataSource, MemmapShardDataset, write_shards)
+from repro.data.prefetch import WindowPrefetcher
 from repro.data.loader import PermutedLoader
 from repro.data.prp import (FeistelPRP, MaterializedPermutation,
                             PermutationView, ReversedPermutation)

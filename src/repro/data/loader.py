@@ -1,4 +1,5 @@
-"""Permutation-driven data loader.
+"""Permutation-driven data loader — the back-compat **facade** over the
+three-layer data pipeline (``sources -> prefetch -> facade``).
 
 The contract that makes GraB work at scale:
 
@@ -11,62 +12,53 @@ The contract that makes GraB work at scale:
   ``batch[h::H]`` of each global batch. No cross-host handshake (straggler-
   and elasticity-friendly).
 
-Background prefetch keeps the device fed without blocking on example
-synthesis/IO (bounded queue, so a slow host degrades gracefully rather than
-OOMing).
+Since the pipeline refactor, the actual machinery lives one layer down in
+:class:`~repro.data.prefetch.WindowPrefetcher`: ``epoch()`` here is window
+prefetch in per-microbatch delivery mode (``n_micro=1``), bit-identical to
+the old single-producer stream, with the same failure semantics (producer
+exceptions re-raised in the consumer, abandonment-safe shutdown,
+dead-producer detection) and the same ``loader.*`` metrics plus the new
+window/worker ones. New code — the training loop included — should consume
+:class:`WindowPrefetcher` directly and get stacked step batches assembled
+off the consumer thread; this class remains for per-microbatch consumers
+(tests, benchmarks, notebooks).
 """
 from __future__ import annotations
 
-import queue
-import threading
-import time
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, Dict
 
 import numpy as np
+
+from repro.data.prefetch import WindowPrefetcher
 
 if TYPE_CHECKING:   # runtime import would cycle: orderings -> data.prp -> here
     from repro.core.orderings import OrderPolicy
 
 
 class PermutedLoader:
-    """``metrics`` (an ``obs.MetricsRegistry``) exposes the prefetch
-    pipeline's health, all host-side perf_counter/qsize reads:
+    """Thin facade: validates like the pipeline (actionable ``ValueError``
+    on non-dividing ``micro_size`` / ``n_hosts``, not a strippable assert),
+    serves the serial random-access reference path (``micro_indices`` /
+    ``load_micro``), and iterates epochs through a
+    :class:`~repro.data.prefetch.WindowPrefetcher` in microbatch mode.
 
-    * ``loader.queue_depth`` (gauge) — prefetch-queue depth at each consumer
-      ``get``: pinned at ``prefetch`` means the producer keeps up, hovering
-      at 0 means every step races the producer;
-    * ``loader.producer_wait_s`` (counter) — consumer time blocked waiting
-      on a slow producer (starvation: the loop is data-bound, not
-      compute-bound). Previously this time was silently swallowed by the
-      poll loop;
-    * ``loader.producer_blocked_s`` (counter) — producer time blocked on a
-      full queue (the healthy direction: data is ahead of compute);
-    * ``loader.starvation_polls`` (counter) — empty-queue poll timeouts.
+    ``prefetch`` is the bounded delivery-buffer depth (the old queue size),
+    ``workers`` the assembly pool, ``window`` the ``order_slice`` horizon in
+    microbatches. ``metrics`` (an ``obs.MetricsRegistry``) exposes the
+    pipeline's health — see :mod:`repro.data.prefetch` for the full list.
     """
 
-    def __init__(self, dataset, policy: OrderPolicy, micro_size: int,
+    def __init__(self, dataset, policy: "OrderPolicy", micro_size: int,
                  host_id: int = 0, n_hosts: int = 1, prefetch: int = 2,
-                 metrics=None):
-        assert len(dataset) % micro_size == 0, \
-            "dataset size must divide into microbatches"
+                 workers: int = 1, window: int = 8, metrics=None):
+        self._pipe = WindowPrefetcher(
+            dataset, policy, micro_size, n_micro=1, host_id=host_id,
+            n_hosts=n_hosts, window=window, workers=workers,
+            buffer=prefetch, metrics=metrics)
         self.ds = dataset
         self.policy = policy
-        self.micro = micro_size
-        self.n_micro = len(dataset) // micro_size
-        assert self.policy.n == self.n_micro, \
-            f"policy orders {self.policy.n} units, loader has {self.n_micro}"
-        if micro_size % n_hosts != 0:
-            # idx[host_id::n_hosts] would hand ceil/floor(micro/H) rows to
-            # different hosts — per-host batch shapes diverge and the jitted
-            # step recompiles (or cross-host collectives deadlock on
-            # mismatched shapes). Fail here with the fix, not at dispatch.
-            raise ValueError(
-                f"micro_size={micro_size} does not divide over "
-                f"n_hosts={n_hosts}: hosts would load "
-                f"{-(-micro_size // n_hosts)} vs {micro_size // n_hosts} "
-                f"rows per microbatch and jit shapes diverge cross-host — "
-                f"pick a microbatch size that is a multiple of the host "
-                f"count (or shrink the host count)")
+        self.micro = int(micro_size)
+        self.n_micro = self._pipe.n_micro_total
         self.host_id, self.n_hosts = host_id, n_hosts
         self.prefetch = prefetch
         self.metrics = metrics
@@ -81,101 +73,14 @@ class PermutedLoader:
         m = self.policy.order_at(epoch, step)
         return np.arange(m * self.micro, (m + 1) * self.micro)
 
-    def load_micro(self, epoch: int, step: int) -> dict:
-        idx = self.micro_indices(epoch, step)
-        local = idx[self.host_id::self.n_hosts]
-        return self.ds.batch(local)
+    def load_micro(self, epoch: int, step: int) -> Dict[str, np.ndarray]:
+        """Serial reference: the prefetched stream is bit-identical to
+        iterating this over steps."""
+        return self._pipe.load_micro(epoch, step)
 
     def epoch(self, epoch: int, start_step: int = 0):
-        """Iterate (step, microbatch) with background prefetch.
-
-        The producer thread is failure- and abandonment-safe:
-
-        * a ``load_micro`` exception is re-raised *in the consumer* (a bare
-          ``finally: q.put(stop)`` would turn it into a silently truncated
-          epoch — the loop would commit an epoch-boundary reorder on a
-          partial sign stream);
-        * every ``q.put`` is bounded by a shutdown flag, so a consumer that
-          abandons the generator mid-epoch (early break, its own exception)
-          unblocks the producer instead of deadlocking it on a full queue;
-        * the consumer's ``q.get`` polls with a timeout and checks the
-          producer is still alive — a producer that dies without enqueueing
-          (interpreter teardown killing the daemon thread, a future refactor
-          dropping the exception hand-off) raises here instead of hanging
-          the training loop forever on an empty queue;
-        * time the consumer spends blocked in those polls is *recorded*, not
-          swallowed: with a ``metrics`` registry, every blocked second lands
-          in ``loader.producer_wait_s`` (and depth/starvation gauges), so a
-          data-bound loop is visible in the run log instead of masquerading
-          as slow steps.
-        """
-        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
-        stop = object()
-        shutdown = threading.Event()
-        reg = self.metrics
-        depth_gauge = reg.gauge("loader.queue_depth") if reg else None
-        wait_counter = reg.counter("loader.producer_wait_s") if reg else None
-        starve_counter = reg.counter("loader.starvation_polls") if reg else None
-        blocked_counter = (reg.counter("loader.producer_blocked_s")
-                           if reg else None)
-
-        def bounded_put(item) -> bool:
-            t_put = time.perf_counter()
-            try:
-                while not shutdown.is_set():
-                    try:
-                        q.put(item, timeout=0.05)
-                        return True
-                    except queue.Full:
-                        continue
-                return False
-            finally:
-                if blocked_counter is not None:
-                    blocked_counter.inc(time.perf_counter() - t_put)
-
-        def producer():
-            try:
-                for s in range(start_step, self.n_micro):
-                    if not bounded_put((s, self.load_micro(epoch, s))):
-                        return                     # consumer went away
-                bounded_put(stop)
-            except BaseException as e:  # noqa: BLE001 — hand to the consumer
-                bounded_put((stop, e))
-
-        t = threading.Thread(target=producer, daemon=True)
-        t.start()
-        try:
-            while True:
-                if depth_gauge is not None:
-                    depth_gauge.set(q.qsize())
-                t_wait = time.perf_counter()
-                try:
-                    try:
-                        item = q.get(timeout=0.2)
-                    except queue.Empty:
-                        if starve_counter is not None:
-                            starve_counter.inc()
-                        if t.is_alive():
-                            continue
-                        # the producer can finish between our last get and
-                        # the liveness check — drain anything it managed to
-                        # enqueue before declaring it dead
-                        try:
-                            item = q.get_nowait()
-                        except queue.Empty:
-                            raise RuntimeError(
-                                f"PermutedLoader producer thread died "
-                                f"without delivering a result (epoch "
-                                f"{epoch}, after start_step {start_step}): "
-                                f"the prefetch queue is empty and the "
-                                f"thread is gone") from None
-                finally:
-                    if wait_counter is not None:
-                        wait_counter.inc(time.perf_counter() - t_wait)
-                if item is stop:
-                    break
-                if isinstance(item, tuple) and item[0] is stop:
-                    raise item[1]
-                yield item
-        finally:
-            shutdown.set()
+        """Iterate (step, microbatch) with background window prefetch.
+        ``start_step`` is a *microbatch* index (exact mid-epoch resume via
+        the random-access contract)."""
+        for s, batch in self._pipe.iter_epoch(epoch, start_step=start_step):
+            yield s, {k: v[0] for k, v in batch.items()}

@@ -1,0 +1,310 @@
+"""Window prefetcher: the middle layer of the data pipeline.
+
+    sources  ->  WindowPrefetcher (this module)  ->  PermutedLoader facade
+
+:class:`WindowPrefetcher` keeps the reordered stream ahead of the
+dispatch-asynchronous training loop. It is built on PR 8's random-access
+ordering contract: a coordinator thread pulls ``policy.order_slice(epoch,
+lo, hi)`` **windows** of the epoch's permutation (the only thread that ever
+touches the policy — one ``order_slice`` per window, so stateful policies
+still materialize at most once per epoch and PRP-backed ones never do), then
+fans the window's optimizer steps out to a small worker pool. Each worker
+gathers a whole ``[n_micro, rows, ...]`` step in ONE row-wise
+``source.batch`` call and reshapes — the ``np.stack`` over microbatches that
+used to run *on the consumer thread* inside the loop's ``loader_wait`` phase
+now happens off-thread, overlapped with device compute.
+
+Delivery is in order through a bounded buffer (backpressure: a slow consumer
+stalls the producer, never OOMs it), and the in-flight lookahead is capped
+at one window, so resident prefetched data is bounded by
+``(window + buffer + 1)`` step batches.
+
+Failure semantics carry over from the PR 5/6 single-thread loader verbatim:
+
+* a worker/coordinator exception is re-raised **in the consumer** (never a
+  silently truncated epoch — the loop would commit an epoch-boundary
+  reorder on a partial sign stream);
+* every queue put is bounded by a shutdown flag, so an abandoned iterator
+  (early break, consumer exception) unwinds the pool instead of
+  deadlocking it on a full buffer;
+* the consumer's poll detects a dead coordinator (empty buffer + thread
+  gone) and raises instead of hanging the loop forever.
+
+Exact mid-epoch resume rides the same contract: ``iter_epoch(epoch,
+start_step=s)`` re-enters at optimizer step ``s`` via random access — no
+replay, bit-identical to the uninterrupted stream.
+
+Telemetry (all host-side ``perf_counter``/``qsize`` reads — the prefetcher
+never touches a ``jax.Array``, preserving the loop's zero-added-device-sync
+guarantee): the PR 7 loader gauges (``loader.queue_depth``,
+``loader.producer_wait_s``, ``loader.producer_blocked_s``,
+``loader.starvation_polls``) plus ``loader.window_fetch`` (timer: wall time
+from a window's ``order_slice`` to its last assembled batch) and worker
+utilization (``loader.worker_busy_s`` counter, ``loader.worker_utilization``
+gauge — busy-fraction of the pool per window).
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import TYPE_CHECKING, Dict, Optional
+
+import numpy as np
+
+if TYPE_CHECKING:   # runtime import would cycle: orderings -> data.prp
+    from repro.core.orderings import OrderPolicy
+
+_STOP = object()
+
+
+class _Slot:
+    """One in-flight assembly: the coordinator hands it to a worker and
+    later blocks on ``done``; exactly one of value/error is set."""
+
+    __slots__ = ("done", "value", "error")
+
+    def __init__(self):
+        self.done = threading.Event()
+        self.value = None
+        self.error = None
+
+
+class WindowPrefetcher:
+    """Order-window prefetch of stacked ``[n_micro, rows, ...]`` step
+    batches from a :class:`~repro.data.sources.DataSource`.
+
+    ``n_micro`` is the number of microbatches delivered per item (the
+    optimizer step's stack; ``n_micro=1`` degenerates to per-microbatch
+    delivery — the facade's mode). ``window`` is the prefetch horizon in
+    items, ``workers`` the assembly pool size, ``buffer`` the bounded
+    delivery queue depth.
+    """
+
+    def __init__(self, source, policy: "OrderPolicy", micro_size: int,
+                 n_micro: int = 1, host_id: int = 0, n_hosts: int = 1,
+                 window: int = 4, workers: int = 1, buffer: int = 2,
+                 metrics=None):
+        n_examples = len(source)
+        micro_size = int(micro_size)
+        if micro_size <= 0 or n_examples % micro_size != 0:
+            raise ValueError(
+                f"dataset of {n_examples} examples does not divide into "
+                f"microbatches of {micro_size}: every epoch must cover "
+                f"every example exactly once — pick a micro_size that "
+                f"divides {n_examples}, or pad/trim the dataset to a "
+                f"multiple of {micro_size}")
+        self.source = source
+        self.policy = policy
+        self.micro = micro_size
+        self.n_micro_total = n_examples // micro_size
+        if policy.n != self.n_micro_total:
+            raise ValueError(
+                f"policy orders {policy.n} units, loader has "
+                f"{self.n_micro_total} microbatches ({n_examples} examples "
+                f"/ micro_size {micro_size}) — build the policy with "
+                f"n={self.n_micro_total}")
+        if micro_size % n_hosts != 0:
+            # idx[host_id::n_hosts] would hand ceil/floor(micro/H) rows to
+            # different hosts — per-host batch shapes diverge and the jitted
+            # step recompiles (or cross-host collectives deadlock on
+            # mismatched shapes). Fail here with the fix, not at dispatch.
+            raise ValueError(
+                f"micro_size={micro_size} does not divide over "
+                f"n_hosts={n_hosts}: hosts would load "
+                f"{-(-micro_size // n_hosts)} vs {micro_size // n_hosts} "
+                f"rows per microbatch and jit shapes diverge cross-host — "
+                f"pick a microbatch size that is a multiple of the host "
+                f"count (or shrink the host count)")
+        if n_micro < 1 or self.n_micro_total % n_micro != 0:
+            raise ValueError(
+                f"epoch stream of {self.n_micro_total} microbatches does "
+                f"not divide into optimizer steps of n_micro={n_micro} — "
+                f"pick n_micro dividing {self.n_micro_total}")
+        if window < 1 or workers < 1 or buffer < 1:
+            raise ValueError(
+                f"window={window}, workers={workers}, buffer={buffer} "
+                f"must all be >= 1")
+        self.n_micro = int(n_micro)
+        self.steps_total = self.n_micro_total // self.n_micro
+        self.host_id, self.n_hosts = int(host_id), int(n_hosts)
+        self.window = int(window)
+        self.workers = int(workers)
+        self.buffer = int(buffer)
+        self.metrics = metrics
+
+    # -- serial reference path (tests, facade compat) ----------------------
+    def micro_rows(self, m: int) -> np.ndarray:
+        """This host's example rows of global microbatch ``m``."""
+        return np.arange(m * self.micro + self.host_id,
+                         (m + 1) * self.micro, self.n_hosts)
+
+    def load_micro(self, epoch: int, step: int) -> Dict[str, np.ndarray]:
+        """Serial reference: one microbatch, fetched on the calling thread.
+        The windowed stream is bit-identical to iterating this."""
+        return self.source.batch(self.micro_rows(
+            self.policy.order_at(epoch, step)))
+
+    def _assemble(self, micros: np.ndarray) -> Dict[str, np.ndarray]:
+        """Gather + stack ``len(micros)`` microbatches in one row-wise
+        ``source.batch`` call: ``[n_micro * rows_per_host]`` rows reshaped
+        to ``[n_micro, rows_per_host, ...]`` — bit-identical to stacking
+        per-microbatch fetches because sources are row-wise."""
+        rows = np.concatenate([self.micro_rows(int(m)) for m in micros])
+        flat = self.source.batch(rows)
+        k = len(micros)
+        return {f: v.reshape(k, v.shape[0] // k, *v.shape[1:])
+                for f, v in flat.items()}
+
+    # -- the pipeline ------------------------------------------------------
+    def iter_epoch(self, epoch: int, start_step: int = 0):
+        """Yield ``(step, batch)`` for optimizer steps ``[start_step,
+        steps_total)`` of ``epoch``, in order; ``batch`` maps each field to
+        a ``[n_micro, rows, ...]`` array assembled off this thread."""
+        if not 0 <= start_step <= self.steps_total:
+            raise ValueError(
+                f"start_step={start_step} out of range for "
+                f"{self.steps_total} steps per epoch")
+        out_q: queue.Queue = queue.Queue(maxsize=self.buffer)
+        task_q: queue.Queue = queue.Queue()
+        shutdown = threading.Event()
+        reg = self.metrics
+        depth_gauge = reg.gauge("loader.queue_depth") if reg else None
+        wait_counter = reg.counter("loader.producer_wait_s") if reg else None
+        starve_counter = reg.counter("loader.starvation_polls") if reg else None
+        blocked_counter = (reg.counter("loader.producer_blocked_s")
+                           if reg else None)
+        window_timer = reg.timer("loader.window_fetch") if reg else None
+        busy_counter = reg.counter("loader.worker_busy_s") if reg else None
+        util_gauge = (reg.gauge("loader.worker_utilization")
+                      if reg else None)
+
+        def worker():
+            while not shutdown.is_set():
+                try:
+                    slot, micros = task_q.get(timeout=0.05)
+                except queue.Empty:
+                    continue
+                t0 = time.perf_counter()
+                try:
+                    slot.value = self._assemble(micros)
+                except BaseException as e:  # noqa: BLE001 — to the consumer
+                    slot.error = e
+                finally:
+                    if busy_counter is not None:
+                        busy_counter.inc(time.perf_counter() - t0)
+                    slot.done.set()
+
+        def bounded_put(item) -> bool:
+            t_put = time.perf_counter()
+            try:
+                while not shutdown.is_set():
+                    try:
+                        out_q.put(item, timeout=0.05)
+                        return True
+                    except queue.Full:
+                        continue
+                return False                   # consumer went away
+            finally:
+                if blocked_counter is not None:
+                    blocked_counter.inc(time.perf_counter() - t_put)
+
+        def wait_slot(slot: _Slot) -> bool:
+            while not shutdown.is_set():
+                if slot.done.wait(timeout=0.05):
+                    return True
+            return False
+
+        # windows pipeline: while window w's tail is still assembling, the
+        # coordinator is already slicing and submitting window w+1 — the cap
+        # below only forces delivery of the *oldest* finished step, so
+        # workers never idle at a window boundary.
+        util_state = [time.perf_counter(), 0.0]   # [last wall, last busy_s]
+
+        def deliver_oldest(inflight) -> bool:
+            step, slot, window_end, t0w = inflight.popleft()
+            if not wait_slot(slot):
+                return False
+            if slot.error is not None:
+                bounded_put((_STOP, slot.error))
+                return False
+            if step == window_end:
+                now = time.perf_counter()
+                if window_timer is not None:
+                    window_timer.record(now - t0w)
+                if util_gauge is not None:
+                    busy = busy_counter.value
+                    dt = now - util_state[0]
+                    if dt > 0:
+                        util_gauge.set(min(1.0, (busy - util_state[1])
+                                           / (self.workers * dt)))
+                    util_state[0], util_state[1] = now, busy
+            return bounded_put((step, slot.value))
+
+        def coordinator():
+            try:
+                inflight = collections.deque()
+                for w_lo in range(start_step, self.steps_total, self.window):
+                    w_hi = min(w_lo + self.window, self.steps_total)
+                    t0w = time.perf_counter()
+                    # the ONLY policy access on the prefetch path: one
+                    # random-access slice per window
+                    micros = self.policy.order_slice(
+                        epoch, w_lo * self.n_micro, w_hi * self.n_micro)
+                    for s in range(w_lo, w_hi):
+                        o = (s - w_lo) * self.n_micro
+                        slot = _Slot()
+                        task_q.put((slot, micros[o:o + self.n_micro]))
+                        inflight.append((s, slot, w_hi - 1, t0w))
+                        while len(inflight) > self.window:
+                            if not deliver_oldest(inflight):
+                                return
+                while inflight:
+                    if not deliver_oldest(inflight):
+                        return
+                bounded_put(_STOP)
+            except BaseException as e:  # noqa: BLE001 — to the consumer
+                bounded_put((_STOP, e))
+
+        pool = [threading.Thread(target=worker, daemon=True)
+                for _ in range(self.workers)]
+        coord = threading.Thread(target=coordinator, daemon=True)
+        for t in pool:
+            t.start()
+        coord.start()
+        try:
+            while True:
+                if depth_gauge is not None:
+                    depth_gauge.set(out_q.qsize())
+                t_wait = time.perf_counter()
+                try:
+                    try:
+                        item = out_q.get(timeout=0.2)
+                    except queue.Empty:
+                        if starve_counter is not None:
+                            starve_counter.inc()
+                        if coord.is_alive():
+                            continue
+                        # the coordinator can finish between our last get
+                        # and the liveness check — drain anything it managed
+                        # to enqueue before declaring it dead
+                        try:
+                            item = out_q.get_nowait()
+                        except queue.Empty:
+                            raise RuntimeError(
+                                f"WindowPrefetcher producer thread died "
+                                f"without delivering a result (epoch "
+                                f"{epoch}, after start_step {start_step}): "
+                                f"the delivery queue is empty and the "
+                                f"coordinator is gone") from None
+                finally:
+                    if wait_counter is not None:
+                        wait_counter.inc(time.perf_counter() - t_wait)
+                if item is _STOP:
+                    break
+                if isinstance(item, tuple) and item[0] is _STOP:
+                    raise item[1]
+                yield item
+        finally:
+            shutdown.set()

@@ -1,0 +1,246 @@
+"""Data sources: the bottom layer of the data pipeline.
+
+The pipeline is three layers (see ``data/prefetch.py`` and
+``data/loader.py``):
+
+    sources (this module)  ->  WindowPrefetcher  ->  PermutedLoader facade
+
+A **source** is anything that serves example rows by global index — the
+:class:`DataSource` protocol below. Two implementations ship:
+
+* :class:`~repro.data.synthetic.SyntheticTextDataset` — in-memory,
+  counter-based (every row is a pure function of ``(seed, index)``);
+* :class:`MemmapShardDataset` — on-disk ``.npy`` token shards behind a JSON
+  manifest, read via ``numpy`` memmap. This is the real-dataset path: a
+  corpus materialized once with :func:`write_shards` is served with O(1)
+  resident memory per shard and per-host sharding stays pure index
+  arithmetic (host ``h`` of ``H`` reads rows ``idx[h::H]`` — no cross-host
+  handshake, so restarts and stragglers are cheap, the CD-GraB multi-host
+  contract).
+
+The source contract the prefetcher relies on (and the manifest checksums
+defend): ``batch(idx)`` is **row-wise** — ``batch(concat(a, b))`` equals the
+row-concatenation of ``batch(a)`` and ``batch(b)``. That is what lets the
+prefetcher gather a whole ``[n_micro, rows]`` step in ONE ``batch`` call and
+reshape, bit-identical to per-microbatch fetches.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from typing import Dict, List
+
+import numpy as np
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_FORMAT = "repro.shards/v1"
+
+
+class DataSource:
+    """Protocol: random-access example storage, addressed by global index.
+
+    Required:
+
+    * ``__len__()`` — total example count;
+    * ``batch(idx)`` — ``{field: np.ndarray}`` with ``len(idx)`` leading
+      rows, row ``j`` being example ``idx[j]``. Must be row-wise (order- and
+      grouping-independent): ``batch(concat(a, b)) == concat_rows(batch(a),
+      batch(b))``.
+
+    Optional:
+
+    * ``read_block(lo, hi)`` — the contiguous rows ``[lo, hi)``; sources
+      with cheap sequential reads (memmap shards) implement it so
+      :func:`write_shards` and bulk scans avoid per-row gather overhead.
+      Semantically identical to ``batch(np.arange(lo, hi))``.
+    """
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def batch(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        raise NotImplementedError
+
+
+def _crc32_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return crc
+            crc = zlib.crc32(chunk, crc)
+
+
+def write_shards(source, out_dir: str, shard_size: int) -> str:
+    """Materialize any :class:`DataSource` to on-disk ``.npy`` shards.
+
+    Layout: ``out_dir/shard_XXXXX.<field>.npy`` (one file per field per
+    shard, rows ``[s*shard_size, min((s+1)*shard_size, n))``) plus
+    ``out_dir/manifest.json`` recording the format version, row counts,
+    per-field dtypes/shapes, and a crc32 per file —
+    :class:`MemmapShardDataset` validates all of it on open, so a truncated
+    copy or a stray edit fails loudly instead of training on garbage.
+
+    Works for *any* conforming source — including the synthetic corpora, so
+    the same training run can A/B in-memory synthesis against the on-disk
+    read path bit-for-bit. Returns the manifest path.
+    """
+    n = len(source)
+    shard_size = int(shard_size)
+    if shard_size <= 0:
+        raise ValueError(f"shard_size must be positive, got {shard_size}")
+    os.makedirs(out_dir, exist_ok=True)
+    read_block = getattr(source, "read_block", None)
+    shards: List[dict] = []
+    fields: Dict[str, dict] = {}
+    for s, lo in enumerate(range(0, n, shard_size)):
+        hi = min(lo + shard_size, n)
+        block = (read_block(lo, hi) if read_block is not None
+                 else source.batch(np.arange(lo, hi)))
+        if not fields:
+            fields = {k: {"dtype": str(v.dtype), "shape": list(v.shape[1:])}
+                      for k, v in block.items()}
+        files = {}
+        for k, v in block.items():
+            fname = f"shard_{s:05d}.{k}.npy"
+            fpath = os.path.join(out_dir, fname)
+            np.save(fpath, np.ascontiguousarray(v))
+            files[k] = {"file": fname, "crc32": _crc32_file(fpath)}
+        shards.append({"rows": hi - lo, "files": files})
+    manifest = {"format": MANIFEST_FORMAT, "n_examples": n,
+                "shard_size": shard_size, "fields": fields, "shards": shards}
+    path = os.path.join(out_dir, MANIFEST_NAME)
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+class MemmapShardDataset(DataSource):
+    """On-disk ``.npy`` shards behind a manifest, served via memmap.
+
+    Opening validates the manifest against the files on disk — existence,
+    dtype/shape agreement, and (``validate=True``, the default) the per-file
+    crc32 recorded at write time — with errors that name the offending file
+    and the fix. Reads go through ``np.load(mmap_mode="r")``: nothing is
+    resident until touched, fancy-indexed gathers copy only the requested
+    rows, and ``read_block`` serves contiguous spans directly off the maps.
+    """
+
+    def __init__(self, directory: str, validate: bool = True):
+        self.dir = str(directory)
+        mpath = os.path.join(self.dir, MANIFEST_NAME)
+        if not os.path.isfile(mpath):
+            raise FileNotFoundError(
+                f"no shard manifest at {mpath}: not a shard directory — "
+                f"materialize one with repro.data.write_shards(source, "
+                f"{self.dir!r}, shard_size) (or examples/train_lm.py "
+                f"--write-shards {self.dir})")
+        with open(mpath) as f:
+            try:
+                man = json.load(f)
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"shard manifest {mpath} is not valid JSON ({e}) — "
+                    f"the directory is corrupt; regenerate it with "
+                    f"write_shards") from None
+        if man.get("format") != MANIFEST_FORMAT:
+            raise ValueError(
+                f"shard manifest {mpath} has format "
+                f"{man.get('format')!r}, this reader speaks "
+                f"{MANIFEST_FORMAT!r} — regenerate the shards or upgrade "
+                f"the reader")
+        self.manifest = man
+        self.fields: Dict[str, dict] = man["fields"]
+        self._rows = np.asarray([s["rows"] for s in man["shards"]],
+                                dtype=np.int64)
+        self._starts = np.concatenate([[0], np.cumsum(self._rows)])
+        self.n = int(self._starts[-1])
+        if self.n != int(man["n_examples"]):
+            raise ValueError(
+                f"shard manifest {mpath} claims {man['n_examples']} "
+                f"examples but its shard rows sum to {self.n} — the "
+                f"manifest was hand-edited or truncated; regenerate it "
+                f"with write_shards")
+        self._mmaps: Dict[tuple, np.ndarray] = {}
+        self._check_files(validate)
+
+    def _check_files(self, validate_crc: bool) -> None:
+        for s, shard in enumerate(self.manifest["shards"]):
+            for field, meta in self.fields.items():
+                ent = shard["files"].get(field)
+                if ent is None:
+                    raise ValueError(
+                        f"shard {s} of {self.dir} has no file for field "
+                        f"{field!r} — the manifest and shards disagree; "
+                        f"regenerate with write_shards")
+                fpath = os.path.join(self.dir, ent["file"])
+                if not os.path.isfile(fpath):
+                    raise FileNotFoundError(
+                        f"shard file {fpath} named by the manifest is "
+                        f"missing — partial copy? re-copy the directory or "
+                        f"regenerate with write_shards")
+                if validate_crc and _crc32_file(fpath) != ent["crc32"]:
+                    raise ValueError(
+                        f"shard file {fpath} fails its manifest crc32 "
+                        f"check — the file changed since write_shards ran "
+                        f"(truncated copy or on-disk corruption); re-copy "
+                        f"or regenerate the shard directory "
+                        f"(MemmapShardDataset(..., validate=False) skips "
+                        f"the check if you know what you are doing)")
+                arr = self._map(s, field)
+                want = (shard["rows"], *meta["shape"])
+                if arr.shape != want or str(arr.dtype) != meta["dtype"]:
+                    raise ValueError(
+                        f"shard file {fpath} holds {arr.dtype}{arr.shape}, "
+                        f"manifest says {meta['dtype']}{want} — mixed shard "
+                        f"generations in one directory; regenerate with "
+                        f"write_shards")
+
+    def _map(self, shard: int, field: str) -> np.ndarray:
+        key = (shard, field)
+        mm = self._mmaps.get(key)
+        if mm is None:
+            fname = self.manifest["shards"][shard]["files"][field]["file"]
+            mm = np.load(os.path.join(self.dir, fname), mmap_mode="r")
+            self._mmaps[key] = mm
+        return mm
+
+    def __len__(self) -> int:
+        return self.n
+
+    def _empty(self, n_rows: int) -> Dict[str, np.ndarray]:
+        return {k: np.empty((n_rows, *m["shape"]), dtype=m["dtype"])
+                for k, m in self.fields.items()}
+
+    def batch(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        idx = np.asarray(idx, dtype=np.int64)
+        if idx.size and (idx.min() < 0 or idx.max() >= self.n):
+            raise IndexError(
+                f"row indices out of range for {self.n} examples "
+                f"(got [{idx.min()}, {idx.max()}])")
+        out = self._empty(idx.shape[0])
+        shard_of = np.searchsorted(self._starts[1:], idx, side="right")
+        for s in np.unique(shard_of):
+            sel = shard_of == s
+            local = idx[sel] - self._starts[s]
+            for field in self.fields:
+                out[field][sel] = self._map(int(s), field)[local]
+        return out
+
+    def read_block(self, lo: int, hi: int) -> Dict[str, np.ndarray]:
+        """Contiguous rows ``[lo, hi)`` — sequential slices off the memmaps
+        (no per-row gather), spliced across shard boundaries."""
+        if not 0 <= lo <= hi <= self.n:
+            raise IndexError(f"block [{lo}, {hi}) out of range for n={self.n}")
+        out = self._empty(hi - lo)
+        s = int(np.searchsorted(self._starts[1:], lo, side="right"))
+        pos = lo
+        while pos < hi:
+            stop = min(hi, int(self._starts[s + 1]))
+            llo, lhi = pos - self._starts[s], stop - self._starts[s]
+            for field in self.fields:
+                out[field][pos - lo:stop - lo] = self._map(s, field)[llo:lhi]
+            pos, s = stop, s + 1
+        return out

@@ -27,6 +27,8 @@ class SyntheticTextDataset:
         return self.n
 
     def example(self, i: int) -> dict:
+        """Reference scalar path: one example, token by token. ``batch`` is
+        the vectorized equivalent and is tested bit-identical to this."""
         rng = np.random.default_rng((self.seed, int(i)))
         toks = np.empty(self.seq_len + 1, dtype=np.int32)
         toks[0] = rng.integers(0, self.vocab)
@@ -39,8 +41,35 @@ class SyntheticTextDataset:
         return {"tokens": toks[:-1], "labels": toks[1:].astype(np.int32)}
 
     def batch(self, idx: np.ndarray) -> dict:
-        exs = [self.example(int(i)) for i in idx]
-        return {k: np.stack([e[k] for e in exs]) for k in exs[0]}
+        """Whole ``[B, L]`` block, vectorized across the batch.
+
+        Per-example RNG streams are untouched (same generator, same draw
+        order and sizes as ``example``), so every row is bit-identical to
+        the scalar path; only the bigram walk — the former per-example
+        Python token loop that made the prefetch producer the benchmark
+        bottleneck — runs batched: L table-lookup steps instead of B*L
+        Python iterations."""
+        B, L = len(idx), self.seq_len
+        toks = np.empty((B, L + 1), dtype=np.int32)
+        branch = np.empty((B, L), dtype=np.int64)
+        noise = np.empty((B, L), dtype=bool)
+        rand = np.empty((B, L), dtype=np.int64)
+        for j, i in enumerate(idx):
+            rng = np.random.default_rng((self.seed, int(i)))
+            toks[j, 0] = rng.integers(0, self.vocab)
+            branch[j] = rng.integers(0, 4, size=L)
+            noise[j] = rng.random(L) < 0.05
+            rand[j] = rng.integers(0, self.vocab, size=L)
+        for t in range(L):
+            nxt = self._next[toks[:, t], branch[:, t]]
+            toks[:, t + 1] = np.where(noise[:, t], rand[:, t], nxt)
+        return {"tokens": toks[:, :-1].copy(),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def read_block(self, lo: int, hi: int) -> dict:
+        """Contiguous rows ``[lo, hi)`` (the optional DataSource fast path;
+        synthesis cost is index-independent, so it is just ``batch``)."""
+        return self.batch(np.arange(lo, hi))
 
 
 def synthetic_classification(n: int, dim: int, classes: int = 10, seed: int = 0,

@@ -43,7 +43,7 @@ import numpy as np
 
 from repro.core.grab import GrabConfig, grab_epoch_end, make_sketch
 from repro.core.orderings import OrderPolicy, make_policy
-from repro.data.loader import PermutedLoader
+from repro.data.prefetch import WindowPrefetcher
 from repro.obs import MetricsRegistry, ProfileWindow, ordering_quality, phase
 from repro.train.checkpoint import CheckpointManager
 from repro.train.state import TrainState
@@ -85,6 +85,10 @@ class LoopConfig:
     shard_policy: Any = None      # launch.sharding.ShardPolicy (mesh only)
     cd_constraints: Optional[str] = None  # CD_GRAB_CANDIDATES name; None =
     #                               the measured hillclimb winner
+    # --- data pipeline (repro.data.prefetch) -------------------------------
+    loader_workers: int = 2       # window-prefetch assembly pool size
+    loader_window: int = 4        # order_slice horizon, in optimizer steps
+    loader_buffer: int = 2        # bounded delivery-queue depth (step batches)
     # --- telemetry (repro.obs) ---------------------------------------------
     metrics_out: Optional[str] = None     # JSONL run-log path (None = no sink;
     #                               metrics still accumulate in-process)
@@ -168,6 +172,9 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
         "n_micro": loop_cfg.n_micro, "micro_size": micro_size,
         "n_examples": len(dataset), "seed": loop_cfg.seed,
         "sync_transfers": loop_cfg.sync_transfers,
+        "loader": {"workers": loop_cfg.loader_workers,
+                   "window": loop_cfg.loader_window,
+                   "buffer": loop_cfg.loader_buffer},
         "mesh": dict(loop_cfg.mesh.shape) if loop_cfg.mesh is not None else None,
         "devices": jax.device_count(),
     }
@@ -194,7 +201,13 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
             deferred=deferred)
     reg.emit("run_meta", run="train.loop", config=run_meta, **meta_kw)
 
-    loader = PermutedLoader(dataset, policy, micro_size, metrics=reg)
+    # the shard-aware window-prefetching pipeline: whole [n_micro, ...]
+    # step batches are order_slice'd, gathered, and stacked OFF this
+    # thread — the loop's loader_wait phase is one next() per step
+    loader = WindowPrefetcher(
+        dataset, policy, micro_size, n_micro=loop_cfg.n_micro,
+        window=loop_cfg.loader_window, workers=loop_cfg.loader_workers,
+        buffer=loop_cfg.loader_buffer, metrics=reg)
 
     sketch = None
     if grab_cfg is not None and grab_cfg.sketch_dim > 0:
@@ -277,18 +290,15 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
     for epoch in range(start_epoch, loop_cfg.epochs):
         t0 = time.perf_counter()
         start_s = resume_step if epoch == start_epoch else 0
-        micro_iter = loader.epoch(epoch, start_step=start_s * loop_cfg.n_micro)
+        step_iter = loader.iter_epoch(epoch, start_step=start_s)
         for step_i in range(start_s, steps_per_epoch):
             ts0 = time.perf_counter()
             global_step = epoch * steps_per_epoch + step_i + 1
             profiler.on_step(global_step - 1)
             with phase("loader_wait", reg):
-                micros = []
-                for _ in range(loop_cfg.n_micro):
-                    _, mb = next(micro_iter)
-                    micros.append(mb)
-                batch = {k: np.stack([m[k] for m in micros])
-                         for k in micros[0]}
+                # the stacked [n_micro, ...] batch was assembled off-thread
+                # by the prefetch pool — this is delivery wait only
+                _, batch = next(step_iter)
             with phase("dispatch", reg):
                 state, metrics = step_fn(state, batch)
             pending.append((epoch, global_step, metrics["loss"]))

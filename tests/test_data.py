@@ -99,10 +99,10 @@ def test_loader_dead_producer_raises_instead_of_hanging(monkeypatch):
     teardown, a refactor dropping the exception hand-off) must surface as a
     RuntimeError in the consumer — the old bare ``q.get()`` hung the
     training loop forever on the empty queue."""
-    import repro.data.loader as loader_mod
+    import repro.data.prefetch as prefetch_mod
 
     class DeadThread:
-        def __init__(self, target=None, daemon=None):
+        def __init__(self, *args, **kwargs):
             pass
 
         def start(self):
@@ -111,7 +111,7 @@ def test_loader_dead_producer_raises_instead_of_hanging(monkeypatch):
         def is_alive(self):
             return False
 
-    monkeypatch.setattr(loader_mod.threading, "Thread", DeadThread)
+    monkeypatch.setattr(prefetch_mod.threading, "Thread", DeadThread)
     ds = SyntheticTextDataset(32, 8, 64, seed=0)
     loader = PermutedLoader(ds, make_policy("so", 8, seed=0), 4)
     with pytest.raises(RuntimeError, match="producer thread died"):
@@ -234,6 +234,39 @@ def test_loader_never_materializes_prp_backed_orders():
             np.testing.assert_array_equal(micros[:, 0] // 4, sigmas[epoch])
             for s, _ in loader.epoch(epoch):
                 pass
+
+
+def test_loader_rejects_non_dividing_micro_size():
+    """len(dataset) % micro_size != 0 must fail at construction with an
+    actionable ValueError naming both values and the fix — the old bare
+    assert vanished under ``python -O`` and read as an opaque
+    AssertionError otherwise."""
+    ds = SyntheticTextDataset(30, 8, 64, seed=0)
+    with pytest.raises(ValueError, match=r"30 examples.*micro.* 7"):
+        PermutedLoader(ds, make_policy("so", 6, seed=0), 7)
+    # and it survives -O: it is a ValueError, not an assert
+    with pytest.raises(ValueError, match="divide"):
+        PermutedLoader(ds, make_policy("so", 6, seed=0), 4)
+
+
+def test_synthetic_batch_bit_identical_to_scalar_path():
+    """The vectorized [B, L] block generator must reproduce the per-example
+    reference path bit-for-bit: same RNG streams, same bigram walk."""
+    for seed, n, L, vocab in ((0, 24, 16, 64), (7, 10, 33, 512)):
+        ds = SyntheticTextDataset(n, L, vocab, seed=seed)
+        idx = np.random.default_rng(seed).permutation(n)[: n // 2]
+        got = ds.batch(idx)
+        want = [ds.example(int(i)) for i in idx]
+        for k in ("tokens", "labels"):
+            np.testing.assert_array_equal(
+                got[k], np.stack([e[k] for e in want]))
+            assert got[k].dtype == want[0][k].dtype
+    # read_block is the same rows as batch(arange)
+    ds = SyntheticTextDataset(12, 8, 32, seed=1)
+    blk = ds.read_block(3, 9)
+    ref = ds.batch(np.arange(3, 9))
+    for k in blk:
+        np.testing.assert_array_equal(blk[k], ref[k])
 
 
 def test_loader_rejects_uneven_host_sharding():

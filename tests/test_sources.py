@@ -1,0 +1,130 @@
+"""MemmapShardDataset / write_shards: manifest round-trip, checksum and
+structure validation, block reads, and bit-identity with the in-memory
+source it was materialized from."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data.sources import (MANIFEST_NAME, MemmapShardDataset,
+                                write_shards)
+from repro.data.synthetic import SyntheticTextDataset
+
+
+def _make(tmp_path, n=32, L=8, vocab=64, shard=10, seed=0):
+    src = SyntheticTextDataset(n, L, vocab, seed=seed)
+    d = str(tmp_path / "shards")
+    write_shards(src, d, shard_size=shard)
+    return src, d
+
+
+def test_write_shards_layout_and_manifest(tmp_path):
+    src, d = _make(tmp_path, n=32, shard=10)
+    man = json.load(open(os.path.join(d, MANIFEST_NAME)))
+    assert man["format"] == "repro.shards/v1"
+    assert man["n_examples"] == 32
+    # 10+10+10+2: uneven tail shard is fine
+    assert [s["rows"] for s in man["shards"]] == [10, 10, 10, 2]
+    assert set(man["fields"]) == {"tokens", "labels"}
+    for s in man["shards"]:
+        for field, ent in s["files"].items():
+            assert os.path.isfile(os.path.join(d, ent["file"]))
+            assert isinstance(ent["crc32"], int)
+
+
+def test_memmap_batch_bit_identical_to_source(tmp_path):
+    src, d = _make(tmp_path)
+    ds = MemmapShardDataset(d)
+    assert len(ds) == len(src)
+    idx = np.random.default_rng(0).permutation(32)[:17]   # cross-shard gather
+    got, want = ds.batch(idx), src.batch(idx)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+        assert got[k].dtype == want[k].dtype
+
+
+def test_memmap_read_block_splices_across_shards(tmp_path):
+    src, d = _make(tmp_path, n=32, shard=10)
+    ds = MemmapShardDataset(d)
+    blk = ds.read_block(7, 26)                            # spans 3 shards
+    ref = src.batch(np.arange(7, 26))
+    for k in ref:
+        np.testing.assert_array_equal(blk[k], ref[k])
+    with pytest.raises(IndexError, match="out of range"):
+        ds.read_block(0, 33)
+
+
+def test_memmap_batch_rejects_out_of_range(tmp_path):
+    _, d = _make(tmp_path)
+    ds = MemmapShardDataset(d)
+    with pytest.raises(IndexError, match="out of range"):
+        ds.batch(np.asarray([0, 32]))
+
+
+def test_missing_manifest_is_actionable(tmp_path):
+    with pytest.raises(FileNotFoundError, match="write_shards"):
+        MemmapShardDataset(str(tmp_path / "nope"))
+
+
+def test_corrupt_shard_fails_crc_with_named_file(tmp_path):
+    _, d = _make(tmp_path)
+    man = json.load(open(os.path.join(d, MANIFEST_NAME)))
+    victim = os.path.join(d, man["shards"][1]["files"]["tokens"]["file"])
+    raw = bytearray(open(victim, "rb").read())
+    raw[-1] ^= 0xFF                                       # flip one byte
+    open(victim, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="crc32") as e:
+        MemmapShardDataset(d)
+    assert os.path.basename(victim) in str(e.value)
+    # validate=False opts out of the scan (same bytes still mapped)
+    MemmapShardDataset(d, validate=False)
+
+
+def test_missing_shard_file_is_actionable(tmp_path):
+    _, d = _make(tmp_path)
+    man = json.load(open(os.path.join(d, MANIFEST_NAME)))
+    os.remove(os.path.join(d, man["shards"][0]["files"]["labels"]["file"]))
+    with pytest.raises(FileNotFoundError, match="re-copy"):
+        MemmapShardDataset(d)
+
+
+def test_truncated_manifest_row_count_is_actionable(tmp_path):
+    _, d = _make(tmp_path)
+    mpath = os.path.join(d, MANIFEST_NAME)
+    man = json.load(open(mpath))
+    man["shards"] = man["shards"][:-1]                    # drop the tail
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(ValueError, match="truncated"):
+        MemmapShardDataset(d)
+
+
+def test_wrong_format_version_is_actionable(tmp_path):
+    _, d = _make(tmp_path)
+    mpath = os.path.join(d, MANIFEST_NAME)
+    man = json.load(open(mpath))
+    man["format"] = "someone.elses/v9"
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(ValueError, match="regenerate"):
+        MemmapShardDataset(d)
+
+
+def test_write_shards_generic_float_source(tmp_path):
+    """Any row-wise dict source shards, not just token corpora."""
+    rng = np.random.default_rng(3)
+    x, y = rng.normal(size=(20, 5)).astype(np.float32), rng.integers(
+        0, 4, size=20).astype(np.int32)
+
+    class Cls:
+        def __len__(self):
+            return 20
+
+        def batch(self, idx):
+            return {"x": x[idx], "y": y[idx]}
+
+    d = str(tmp_path / "cls")
+    write_shards(Cls(), d, shard_size=7)
+    ds = MemmapShardDataset(d)
+    idx = np.asarray([19, 0, 7, 13])
+    np.testing.assert_array_equal(ds.batch(idx)["x"], x[idx])
+    np.testing.assert_array_equal(ds.batch(idx)["y"], y[idx])
