@@ -1,0 +1,50 @@
+"""Invariant linter: AST-based static analysis of the repo's contracts.
+
+PRs 5-9 fought for runtime invariants — zero per-step device→host
+transfers, no per-epoch retracing, donation-safe (dealiased) state trees,
+producer threads that can never hang the consumer, and deterministic
+clocks/RNG on the core paths. Each of those contracts is enforced at
+runtime by one or two transfer-guarded or call-counting tests that cover
+one code path; this package enforces them at the **source level, on every
+file**: a new ``float(loss)`` in the step loop, a ``jax.jit`` built inside
+an epoch loop, or a bare ``q.get()`` fails CI before it ships.
+
+Checkers (see each module's docstring for the precise rules):
+
+========================  ==================================================
+``host-sync``             device→host syncs (``jax.device_get``,
+                          ``.item()``, in-loop ``float``/``int``/``bool``/
+                          ``np.asarray`` on the step path) outside the
+                          sanctioned chokepoints
+``retrace``               ``jax.jit``/``pjit`` built inside loop bodies;
+                          unhashable ``static_argnums``-style arguments
+``donation-alias``        pytree constructors that reuse one array-valued
+                          local for multiple leaves (donation rejects
+                          aliased buffers — the PR 5 ``s``/``m_prev``/
+                          ``m_acc`` bug class)
+``concurrency``           bare ``Queue.get``/``put`` without timeout or
+                          liveness bound; threads without a shutdown
+                          ``Event``/``join``; ``nonlocal`` writes from
+                          thread targets
+``determinism``           ``time.time`` (durations must use
+                          ``perf_counter``), legacy unseeded
+                          ``np.random.*``, stdlib ``random.*``
+========================  ==================================================
+
+Deliberate sites carry an inline ``# repro: allow[<checker>]`` pragma (on
+the flagged line or alone on the line above); historical findings live in
+the checked-in baseline (``analysis_baseline.json``) so the CI gate
+
+    python -m repro.analysis --fail-on-new
+
+fails only on *new* findings. Stdlib-only: ``ast`` + ``json`` — importable
+(and runnable) without jax installed.
+"""
+from repro.analysis.base import Finding, ModuleInfo
+from repro.analysis.runner import (ALL_CHECKERS, analyze_paths, load_baseline,
+                                   main, make_baseline, new_findings)
+
+__all__ = [
+    "ALL_CHECKERS", "Finding", "ModuleInfo", "analyze_paths",
+    "load_baseline", "main", "make_baseline", "new_findings",
+]

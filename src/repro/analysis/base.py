@@ -1,0 +1,194 @@
+"""Shared AST machinery for the invariant checkers.
+
+One :class:`ModuleInfo` per analyzed file: the parsed tree with parent
+links, an import alias table (so ``jnp.zeros`` resolves to
+``jax.numpy.zeros`` whatever the file calls it), the raw source lines, and
+the ``# repro: allow[...]`` pragma map. Checkers are pure functions
+``check(mod) -> [Finding]`` over this object — no imports of the analyzed
+code, no execution, stdlib only.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set
+
+#: matches anywhere in a comment, so prose can precede the pragma:
+#: `x = int(a)  # host numpy scalar  repro: allow[host-sync]`
+PRAGMA_RE = re.compile(r"#.*?\brepro:\s*allow\[([^\]]+)\]")
+
+#: loop constructs for the "inside a loop" tests — comprehensions count:
+#: a per-element sync/retrace in a comprehension is the same bug.
+LOOP_NODES = (ast.For, ast.While, ast.AsyncFor,
+              ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda, ast.Module)
+
+
+@dataclasses.dataclass
+class Finding:
+    """One invariant violation, pinned to ``path:line``."""
+
+    checker: str
+    path: str           # root-relative, posix separators — the baseline key
+    line: int
+    col: int
+    message: str
+    hint: str
+    snippet: str        # stripped source line: stable across line shifts
+    baselined: bool = False
+
+    def key(self) -> str:
+        return f"{self.path}::{self.checker}::{self.snippet}"
+
+    def render(self) -> str:
+        mark = " [baselined]" if self.baselined else ""
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"[{self.checker}]{mark} {self.message}\n"
+                f"    {self.snippet}\n    hint: {self.hint}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ModuleInfo:
+    """Parsed module + the lookups every checker needs."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child._repro_parent = node  # type: ignore[attr-defined]
+        self.aliases: Dict[str, str] = {}
+        self.imports: Set[str] = set()
+        self._collect_imports()
+        self.pragmas: Dict[int, Set[str]] = self._collect_pragmas()
+
+    # -- imports -----------------------------------------------------------
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    root = a.name.split(".")[0]
+                    self.imports.add(root)
+                    # `import jax.numpy as jnp` binds jnp -> jax.numpy;
+                    # plain `import jax.numpy` binds only the root name
+                    self.aliases[a.asname or root] = a.name if a.asname else root
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if node.level == 0 and mod:
+                    self.imports.add(mod.split(".")[0])
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    full = f"{mod}.{a.name}" if mod else a.name
+                    self.aliases[a.asname or a.name] = full
+
+    def imports_any(self, *mods: str) -> bool:
+        return any(m in self.imports for m in mods)
+
+    # -- pragmas -----------------------------------------------------------
+    def _collect_pragmas(self) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = PRAGMA_RE.search(line)
+            if m:
+                out[i] = {c.strip() for c in m.group(1).split(",") if c.strip()}
+        return out
+
+    def suppressed(self, checker: str, line: int) -> bool:
+        """True if ``# repro: allow[<checker>]`` covers ``line`` — on the
+        line itself, or alone on the line directly above."""
+        ids = self.pragmas.get(line)
+        if ids and (checker in ids or "*" in ids):
+            return True
+        ids = self.pragmas.get(line - 1)
+        if ids and (checker in ids or "*" in ids):
+            above = self.lines[line - 2].strip() if line >= 2 else ""
+            if above.startswith("#"):      # pragma-only line covers the next
+                return True
+        return False
+
+    # -- node lookups ------------------------------------------------------
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Dotted name of an expression, aliases resolved:
+        ``jnp.zeros`` -> ``jax.numpy.zeros``, ``Queue`` (from-imported) ->
+        ``queue.Queue``. None for anything that is not a plain name chain."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(self.aliases.get(node.id, node.id))
+            return ".".join(reversed(parts))
+        return None
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def finding(self, checker: str, node: ast.AST, message: str,
+                hint: str) -> Finding:
+        return Finding(checker=checker, path=self.path, line=node.lineno,
+                       col=node.col_offset, message=message, hint=hint,
+                       snippet=self.snippet(node.lineno))
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_repro_parent", None)
+
+
+def in_loop(node: ast.AST) -> bool:
+    """True when ``node`` sits lexically inside a loop body of its own
+    function scope (a loop in an *enclosing* function does not count — the
+    nested function may be called once)."""
+    p = parent(node)
+    while p is not None:
+        if isinstance(p, SCOPE_NODES):
+            return False
+        if isinstance(p, LOOP_NODES):
+            return True
+        p = parent(p)
+    return False
+
+
+def enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    p = parent(node)
+    while p is not None:
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return p
+        p = parent(p)
+    return None
+
+
+def enclosing_class(node: ast.AST) -> Optional[ast.AST]:
+    p = parent(node)
+    while p is not None:
+        if isinstance(p, ast.ClassDef):
+            return p
+        p = parent(p)
+    return None
+
+
+def qualname(node: ast.AST) -> str:
+    """Dotted enclosing-scope name, e.g. ``run_training.flush_losses`` or
+    ``CheckpointManager.save``; "" at module level."""
+    names: List[str] = []
+    p = parent(node)
+    while p is not None:
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            names.append(p.name)
+        p = parent(p)
+    return ".".join(reversed(names))
+
+
+def call_keyword(call: ast.Call, name: str) -> Optional[ast.keyword]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw
+    return None

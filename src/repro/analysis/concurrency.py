@@ -1,0 +1,167 @@
+"""``concurrency``: queue/thread patterns that can hang the training loop.
+
+The PR 6 dead-producer hang and the PR 9 prefetcher hardening define the
+contract:
+
+* never a **bare** ``Queue.get()`` — if the producer died, the consumer
+  hangs forever; poll with ``get(timeout=...)`` plus a liveness check;
+* never a **bare** ``put(item)`` on a *bounded* queue — if the consumer
+  abandoned the iterator the producer deadlocks on a full buffer; bound
+  every put with a timeout + shutdown flag (puts on queues constructed
+  unbounded in the same scope are exempt — they cannot block);
+* every started ``Thread`` needs a shutdown ``Event`` or a ``join`` in its
+  owning scope — a wedged daemon thread otherwise outlives the epoch;
+* a thread target writing captured state via ``nonlocal`` is a cross-thread
+  data race waiting for a second writer — route results through a queue,
+  ``Event``, or per-slot objects.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Set
+
+from repro.analysis.base import (Finding, ModuleInfo, call_keyword,
+                                 enclosing_class, enclosing_function, parent)
+
+CHECKER = "concurrency"
+
+QUEUEISH = re.compile(r"(^|_)(q\d*|queue)($|_)|queue", re.IGNORECASE)
+QUEUE_CTORS = {"queue.Queue", "queue.LifoQueue", "queue.PriorityQueue",
+               "queue.SimpleQueue"}
+THREAD_CTORS = {"threading.Thread", "Thread"}
+EVENT_CTORS = {"threading.Event", "Event"}
+
+
+def _receiver_name(func: ast.AST) -> Optional[str]:
+    """Terminal identifier of the receiver: ``self.out_q.put`` -> out_q."""
+    if not isinstance(func, ast.Attribute):
+        return None
+    recv = func.value
+    if isinstance(recv, ast.Attribute):
+        return recv.attr
+    if isinstance(recv, ast.Name):
+        return recv.id
+    return None
+
+
+def _unbounded_queue_names(mod: ModuleInfo) -> Set[str]:
+    """Names assigned ``queue.Queue()`` with no maxsize (put never blocks).
+    SimpleQueue is always unbounded."""
+    out: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign):   # task_q: queue.Queue = ...
+            targets = [node.target]
+        else:
+            continue
+        if not isinstance(node.value, ast.Call):
+            continue
+        ctor = mod.dotted(node.value.func)
+        if ctor not in QUEUE_CTORS:
+            continue
+        call = node.value
+        bounded = bool(call.args)
+        kw = call_keyword(call, "maxsize")
+        if kw is not None:
+            bounded = not (isinstance(kw.value, ast.Constant)
+                           and not kw.value.value)   # maxsize=0 -> unbounded
+        if ctor == "queue.SimpleQueue":
+            bounded = False
+        if bounded:
+            continue
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                out.add(tgt.id)
+            elif isinstance(tgt, ast.Attribute):
+                out.add(tgt.attr)
+    return out
+
+
+def _scope_has_shutdown(mod: ModuleInfo, node: ast.AST) -> bool:
+    """Does the Thread's owning scope (enclosing function, else class, else
+    module) create an Event or join a thread?"""
+    scope = enclosing_function(node) or enclosing_class(node) or mod.tree
+    scopes = [scope]
+    cls = enclosing_class(node)
+    if cls is not None and cls is not scope:
+        scopes.append(cls)
+    for s in scopes:
+        for n in ast.walk(s):
+            if isinstance(n, ast.Call):
+                if mod.dotted(n.func) in EVENT_CTORS:
+                    return True
+                if (isinstance(n.func, ast.Attribute)
+                        and n.func.attr == "join"):
+                    return True
+    return False
+
+
+def _thread_target_names(mod: ModuleInfo) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and mod.dotted(node.func) in THREAD_CTORS:
+            kw = call_keyword(node, "target")
+            if kw is not None and isinstance(kw.value, ast.Name):
+                names.add(kw.value.id)
+    return names
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    if not mod.imports_any("queue", "threading"):
+        return []
+    out: List[Finding] = []
+    unbounded = _unbounded_queue_names(mod)
+    targets = _thread_target_names(mod)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            recv = _receiver_name(node.func)
+            method = (node.func.attr
+                      if isinstance(node.func, ast.Attribute) else None)
+            queueish = recv is not None and bool(QUEUEISH.search(recv))
+            if (queueish and method == "get" and not node.args
+                    and not node.keywords):
+                out.append(mod.finding(
+                    CHECKER, node,
+                    f"bare `{recv}.get()`: hangs forever if the producer "
+                    f"thread died (the PR 6 dead-producer bug class)",
+                    "poll with get(timeout=...) and check producer "
+                    "liveness (thread.is_alive()) on Empty, raising "
+                    "instead of waiting on a corpse"))
+            elif (queueish and method == "put"
+                  and recv not in unbounded
+                  and call_keyword(node, "timeout") is None
+                  and call_keyword(node, "block") is None):
+                out.append(mod.finding(
+                    CHECKER, node,
+                    f"bare `{recv}.put(...)` on a (possibly) bounded "
+                    f"queue: deadlocks the producer when the consumer "
+                    f"abandons the stream with the buffer full",
+                    "bound every put with put(item, timeout=...) inside a "
+                    "`while not shutdown.is_set()` retry loop (see "
+                    "data/prefetch.py bounded_put); queues constructed "
+                    "unbounded in this scope are exempt automatically"))
+            elif mod.dotted(node.func) in THREAD_CTORS:
+                if not _scope_has_shutdown(mod, node):
+                    out.append(mod.finding(
+                        CHECKER, node,
+                        "Thread started without a shutdown Event or join "
+                        "in its owning scope: a wedged worker outlives "
+                        "the epoch and leaks, or hangs interpreter "
+                        "shutdown",
+                        "create a threading.Event() the worker loop "
+                        "checks (`while not shutdown.is_set()`), or join "
+                        "the thread where its work is awaited"))
+        elif isinstance(node, ast.Nonlocal):
+            fn = enclosing_function(node)
+            if fn is not None and fn.name in targets:
+                out.append(mod.finding(
+                    CHECKER, node,
+                    f"thread target `{fn.name}` writes captured state via "
+                    f"nonlocal ({', '.join(node.names)}): cross-thread "
+                    f"mutation outside the owning thread",
+                    "hand results back through a queue / per-task slot "
+                    "object / Event instead of rebinding closure state "
+                    "from the worker thread"))
+    return out

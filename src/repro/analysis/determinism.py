@@ -1,0 +1,66 @@
+"""``determinism``: non-deterministic clocks and RNG on core paths.
+
+CD-GraB coordinates example orders across workers, so replicated
+host-side decisions must be bit-identical on every shard (Cooper et al.
+2023) — and the telemetry trend tables only mean something if durations
+come off a monotonic clock. The contract:
+
+* durations use ``time.perf_counter`` — ``time.time`` is wall-clock and
+  jumps under NTP (a deliberate wall-clock *timestamp*, e.g. a record's
+  ``time_unix``, gets a pragma saying so);
+* randomness is counter-keyed: ``np.random.default_rng((seed, ...))`` /
+  ``SeedSequence`` — never the legacy global ``np.random.*`` samplers,
+  whose hidden state diverges across restarts and shards;
+* stdlib ``random.*`` never appears on core paths at all.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.base import Finding, ModuleInfo
+
+CHECKER = "determinism"
+
+LEGACY_NP_RANDOM = {
+    "seed", "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "shuffle", "permutation", "choice", "normal", "uniform",
+    "standard_normal", "beta", "binomial", "bytes", "exponential", "gamma",
+    "poisson",
+}
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    uses_std_random = "random" in mod.imports
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = mod.dotted(node.func)
+        if name is None:
+            continue
+        if name == "time.time":
+            out.append(mod.finding(
+                CHECKER, node,
+                "time.time() is wall-clock: NTP steps corrupt measured "
+                "durations and ordering decisions keyed on it",
+                "use time.perf_counter() for durations/timing; a "
+                "deliberate wall-clock timestamp (record metadata) gets "
+                "`# repro: allow[determinism]` with a comment"))
+        elif (name.startswith("numpy.random.")
+              and name.rsplit(".", 1)[1] in LEGACY_NP_RANDOM):
+            out.append(mod.finding(
+                CHECKER, node,
+                f"legacy global numpy RNG `{name}`: hidden global state — "
+                f"not reproducible across restarts, imports, or shards",
+                "derive a counter-keyed generator instead: "
+                "np.random.default_rng((seed, epoch, ...)) or "
+                "SeedSequence, as data/prp.py and the orderings do"))
+        elif (uses_std_random and name.startswith("random.")
+              and mod.aliases.get("random", "random") == "random"):
+            out.append(mod.finding(
+                CHECKER, node,
+                f"stdlib `{name}`: process-global RNG on a core path",
+                "use np.random.default_rng((seed, ...)) keyed on the "
+                "run's seed so every shard and restart draws identically"))
+    return out

@@ -1,0 +1,84 @@
+"""``donation-alias``: one array local reused for multiple pytree leaves.
+
+The live loop donates the whole ``TrainState`` into the jitted step
+(``donate_argnums=(0,)``). Donating the *same* buffer twice — a state tree
+built as ``z = jnp.zeros(d); GrabState(s=z, m_prev=z, m_acc=z)`` — is an
+XLA execute error (or, worse, silent aliasing under a different backend).
+PR 5 dealiased exactly this in ``init_grab_state``/
+``init_parallel_grab_state``; this checker keeps the class extinct.
+
+Rule: within one function, a local name bound to an array-producing call
+(``jnp.*`` / ``jax.*`` / ``np.*``) that appears as the **value of two or
+more fields** in a single constructor call or dict literal is flagged.
+Fresh allocations per field (each leaf its own ``zeros_like``) are the fix.
+"""
+from __future__ import annotations
+
+import ast
+import collections
+from typing import List
+
+from repro.analysis.base import Finding, ModuleInfo
+
+CHECKER = "donation-alias"
+
+ARRAY_ROOTS = ("jax.", "numpy.")
+
+
+def _array_locals(fn: ast.AST, mod: ModuleInfo) -> set:
+    """Names assigned (anywhere in ``fn``) from a jax/numpy call."""
+    names = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign) or not isinstance(
+                node.value, ast.Call):
+            continue
+        callee = mod.dotted(node.value.func) or ""
+        if not (callee.startswith(ARRAY_ROOTS)
+                or callee in ("jax", "numpy")):
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                names.add(tgt.id)
+    return names
+
+
+def _aliased_fields(values_by_field, arrays) -> dict:
+    """{name: [field, ...]} for array names used in >= 2 fields."""
+    uses = collections.defaultdict(list)
+    for field, value in values_by_field:
+        if isinstance(value, ast.Name) and value.id in arrays:
+            uses[value.id].append(field)
+    return {n: f for n, f in uses.items() if len(f) >= 2}
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    if not mod.imports_any("jax"):
+        return []
+    out: List[Finding] = []
+    scopes = [n for n in ast.walk(mod.tree)
+              if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in scopes:
+        arrays = _array_locals(fn, mod)
+        if not arrays:
+            continue
+        for node in ast.walk(fn):
+            pairs = None
+            if isinstance(node, ast.Call) and len(node.keywords) >= 2:
+                pairs = [(kw.arg or "**", kw.value) for kw in node.keywords]
+            elif isinstance(node, ast.Dict) and len(node.keys) >= 2:
+                pairs = [(ast.unparse(k) if k is not None else "**", v)
+                         for k, v in zip(node.keys, node.values)]
+            if not pairs:
+                continue
+            aliased = _aliased_fields(pairs, arrays)
+            for name, fields in sorted(aliased.items()):
+                out.append(mod.finding(
+                    CHECKER, node,
+                    f"aliased pytree leaves: `{name}` is the value of "
+                    f"fields {', '.join(fields)} — donating this tree "
+                    f"(donate_argnums) hands XLA the same buffer twice "
+                    f"(the PR 5 s/m_prev/m_acc bug class)",
+                    f"allocate one array per leaf (a fresh "
+                    f"zeros/zeros_like call per field) instead of reusing "
+                    f"`{name}`"))
+    return out

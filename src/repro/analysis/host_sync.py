@@ -1,0 +1,141 @@
+"""``host-sync``: device→host transfers outside the sanctioned chokepoints.
+
+The async loop's contract (PR 5, transfer-guard-enforced at runtime for one
+code path) is *zero* per-step device→host syncs: losses batch-fetch per
+``log_every``, signs come back once per epoch, checkpoints do one batched
+``device_get``, serving syncs tokens once per generate. This checker makes
+the contract hold at the source level everywhere:
+
+* ``jax.device_get`` / ``jax.block_until_ready`` — flagged wherever they
+  appear (each is a sync by definition); the known batched chokepoints are
+  allowlisted below, anything else needs a pragma making the batching
+  argument in a comment;
+* ``.item()`` — always a scalar sync in a jax-importing module;
+* ``float()`` / ``int()`` / ``bool()`` / ``np.asarray()`` / ``np.array()``
+  **inside a loop** — the step-path shape of the bug: a cast per
+  step/element blocks dispatch once per iteration. Only checked in
+  jax-importing modules on the step path (``train/``, ``serve/``,
+  ``core/`` under ``src/repro``; everywhere for files outside the package,
+  e.g. test fixtures), because a cast of host data is only noise.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.base import Finding, ModuleInfo, in_loop, qualname
+
+CHECKER = "host-sync"
+
+SYNC_CALLS = {"jax.device_get", "jax.block_until_ready"}
+CAST_CALLS = {"float", "int", "bool"}
+NP_CASTS = {"numpy.asarray", "numpy.array"}
+
+#: sanctioned batched chokepoints: (root-relative path) -> enclosing
+#: qualnames where explicit syncs are the design (one batched transfer).
+#: Everything else is a finding — deliberate one-off sites use pragmas.
+ALLOWLIST = {
+    "src/repro/train/loop.py": {
+        # the batched loss flush: ONE device_get per log_every window
+        "run_training.flush_losses",
+    },
+    "src/repro/train/checkpoint.py": {
+        # one batched device_get for the whole state tree per save
+        "CheckpointManager.save", "save_checkpoint",
+    },
+}
+
+
+def _allowlisted(mod: ModuleInfo, node: ast.AST) -> bool:
+    allowed = ALLOWLIST.get(mod.path)
+    if not allowed:
+        return False
+    qn = qualname(node)
+    return any(qn == a or qn.startswith(a + ".") for a in allowed)
+
+
+def _cast_rule_applies(path: str) -> bool:
+    # inside the package: step/serve/core paths only; outside (fixtures,
+    # scripts handed to the CLI explicitly): always
+    if "src/repro/" in path.replace("\\", "/"):
+        return any(seg in path for seg in
+                   ("src/repro/train/", "src/repro/serve/",
+                    "src/repro/core/"))
+    return True
+
+
+def _nonconstant(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return False
+    if isinstance(node, ast.UnaryOp):
+        return _nonconstant(node.operand)
+    return True
+
+
+METADATA_ATTRS = {"size", "ndim", "nbytes"}
+
+
+def _is_metadata(node: ast.AST) -> bool:
+    """Shape/size metadata never syncs: `x.size`, `x.ndim`, `len(x)`,
+    `x.shape[0]` are host attributes of the array object itself."""
+    if isinstance(node, ast.Attribute) and node.attr in METADATA_ATTRS:
+        return True
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id == "len"):
+        return True
+    if (isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Attribute)
+            and node.value.attr == "shape"):
+        return True
+    return False
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    if not mod.imports_any("jax"):
+        return []
+    out: List[Finding] = []
+    casts_here = _cast_rule_applies(mod.path)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = mod.dotted(node.func)
+        if name in SYNC_CALLS:
+            if not _allowlisted(mod, node):
+                out.append(mod.finding(
+                    CHECKER, node,
+                    f"explicit device→host sync `{name}` outside the "
+                    f"allowlisted chokepoints",
+                    "batch the transfer through an existing chokepoint "
+                    "(flush_losses / once-per-epoch sign fetch / "
+                    "checkpoint save), or annotate a deliberate batched "
+                    "site with `# repro: allow[host-sync]`"))
+            continue
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+                and not node.args and not node.keywords):
+            if not _allowlisted(mod, node):
+                out.append(mod.finding(
+                    CHECKER, node,
+                    ".item() forces a scalar device→host sync",
+                    "keep the value on device, or fetch it inside a "
+                    "batched chokepoint (jax.device_get of the whole "
+                    "pending list)"))
+            continue
+        if not casts_here or not in_loop(node):
+            continue
+        is_cast = (name in CAST_CALLS and len(node.args) == 1
+                   and _nonconstant(node.args[0])
+                   and not _is_metadata(node.args[0]))
+        is_np = (name in NP_CASTS and node.args
+                 and _nonconstant(node.args[0])
+                 and not _is_metadata(node.args[0]))
+        if (is_cast or is_np) and not _allowlisted(mod, node):
+            out.append(mod.finding(
+                CHECKER, node,
+                f"`{name}(...)` inside a loop: on a jax value this is one "
+                f"blocking device→host sync per iteration (the step-path "
+                f"sync bug class)",
+                "accumulate device values and fetch them in one batched "
+                "jax.device_get outside the loop; if the operand is "
+                "host-only data, annotate the line with "
+                "`# repro: allow[host-sync]` saying so"))
+    return out

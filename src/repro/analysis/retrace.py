@@ -1,0 +1,64 @@
+"""``retrace``: jit compilation built inside loops; unhashable static args.
+
+PR 5 fixed exactly this bug class by hand: the epoch-end rollover was
+``jax.jit(lambda ...)`` rebuilt at every epoch boundary, so XLA retraced
+(and recompiled) once per epoch. The source-level contract: ``jax.jit`` /
+``pjit`` / ``functools.partial(jax.jit, ...)`` is built **once**, outside
+any loop body, and its cache key knobs (``static_argnums`` /
+``static_argnames`` / ``donate_argnums``) are hashable tuples — a list or
+dict literal there either breaks the cache or mutates under the jit.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.base import Finding, ModuleInfo, in_loop
+
+CHECKER = "retrace"
+
+JIT_NAMES = {"jax.jit", "jax.pjit", "pjit", "jax.experimental.pjit.pjit"}
+PARTIAL_NAMES = {"functools.partial", "partial"}
+STATIC_KWARGS = ("static_argnums", "static_argnames", "donate_argnums",
+                 "donate_argnames")
+
+
+def _is_jit_build(mod: ModuleInfo, node: ast.Call) -> bool:
+    name = mod.dotted(node.func)
+    if name in JIT_NAMES:
+        return True
+    if name in PARTIAL_NAMES and node.args:
+        return mod.dotted(node.args[0]) in JIT_NAMES
+    return False
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    if not mod.imports_any("jax"):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not _is_jit_build(mod, node):
+            continue
+        if in_loop(node):
+            out.append(mod.finding(
+                CHECKER, node,
+                "jit built inside a loop body: every iteration constructs "
+                "a fresh traced callable — retrace + recompile per "
+                "iteration (the PR 5 per-epoch rollover bug class)",
+                "hoist the jax.jit(...) above the loop and reuse the "
+                "returned callable; if each iteration genuinely needs its "
+                "own compile (e.g. a candidate sweep), annotate with "
+                "`# repro: allow[retrace]`"))
+        for kw in node.keywords:
+            if kw.arg in STATIC_KWARGS and isinstance(
+                    kw.value, (ast.List, ast.Set, ast.Dict)):
+                out.append(mod.finding(
+                    CHECKER, kw.value,
+                    f"mutable literal for `{kw.arg}`: unhashable static "
+                    f"arguments poison the jit cache key",
+                    f"use a tuple: `{kw.arg}=({ast.unparse(kw.value)[1:-1]},)`"
+                    if isinstance(kw.value, ast.List) else
+                    f"use a hashable tuple for `{kw.arg}`"))
+    return out

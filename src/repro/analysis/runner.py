@@ -1,0 +1,240 @@
+"""Runner + CLI: walk files, run every checker, diff against the baseline.
+
+The CI gate is::
+
+    python -m repro.analysis --fail-on-new
+
+which scans ``src/repro`` under the repo root, drops pragma-suppressed
+sites, subtracts the checked-in baseline (``analysis_baseline.json``), and
+exits non-zero iff any finding is **new**. Baseline keys are
+``path::checker::<stripped source line>`` with counts, so findings survive
+unrelated line shifts but a second occurrence of a baselined pattern still
+fails the gate.
+
+Other modes: ``--strict`` (any finding fails, baseline ignored),
+``--write-baseline`` (accept the current state), ``--json`` (machine
+report, uploaded as a CI artifact next to the bench JSONs).
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import os
+import sys
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis import (concurrency, determinism, donation, host_sync,
+                            retrace)
+from repro.analysis.base import Finding, ModuleInfo
+
+ALL_CHECKERS = {
+    host_sync.CHECKER: host_sync.check,
+    retrace.CHECKER: retrace.check,
+    donation.CHECKER: donation.check,
+    concurrency.CHECKER: concurrency.check,
+    determinism.CHECKER: determinism.check,
+}
+
+BASELINE_NAME = "analysis_baseline.json"
+BASELINE_VERSION = 1
+
+
+def _default_root() -> str:
+    """Repo root: three levels up from this package (src/repro/analysis),
+    falling back to cwd when the package is installed elsewhere."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    cand = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    if os.path.isfile(os.path.join(cand, "pyproject.toml")):
+        return cand
+    return os.getcwd()
+
+
+def iter_python_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d != "__pycache__"
+                                 and not d.startswith("."))
+            out.extend(os.path.join(dirpath, f) for f in sorted(filenames)
+                       if f.endswith(".py"))
+    return out
+
+
+def analyze_paths(paths: Iterable[str], root: Optional[str] = None,
+                  checkers: Optional[Dict] = None
+                  ) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Run every checker over every ``.py`` under ``paths``.
+
+    Returns ``(findings, suppressed, errors)`` — pragma-suppressed sites
+    are reported separately so the CLI can account for them; files that do
+    not parse land in ``errors`` (and fail the gate: an unparseable core
+    file must never pass silently).
+    """
+    root = root or _default_root()
+    checkers = checkers if checkers is not None else ALL_CHECKERS
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    errors: List[str] = []
+    for fpath in iter_python_files(paths):
+        rel = os.path.relpath(os.path.abspath(fpath), root).replace(os.sep, "/")
+        try:
+            with open(fpath, encoding="utf-8") as f:
+                mod = ModuleInfo(rel, f.read())
+        except (SyntaxError, UnicodeDecodeError, OSError) as e:
+            errors.append(f"{rel}: {type(e).__name__}: {e}")
+            continue
+        for cid, check in checkers.items():
+            for finding in check(mod):
+                if mod.suppressed(cid, finding.line):
+                    suppressed.append(finding)
+                else:
+                    findings.append(finding)
+    findings.sort(key=lambda f: (f.path, f.line, f.checker))
+    return findings, suppressed, errors
+
+
+# -- baseline ---------------------------------------------------------------
+
+def make_baseline(findings: Iterable[Finding]) -> dict:
+    counts = collections.Counter(f.key() for f in findings)
+    return {"version": BASELINE_VERSION,
+            "findings": dict(sorted(counts.items()))}
+
+
+def load_baseline(path: str) -> dict:
+    if not os.path.isfile(path):
+        return {"version": BASELINE_VERSION, "findings": {}}
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"baseline {path} has version {data.get('version')!r}, this "
+            f"runner speaks {BASELINE_VERSION} — regenerate it with "
+            f"--write-baseline")
+    return data
+
+
+def new_findings(findings: List[Finding], baseline: dict) -> List[Finding]:
+    """Findings beyond the baseline's per-key counts; also marks the
+    covered ones ``baselined`` in place."""
+    budget = collections.Counter(baseline.get("findings", {}))
+    fresh: List[Finding] = []
+    for f in findings:
+        if budget[f.key()] > 0:
+            budget[f.key()] -= 1
+            f.baselined = True
+        else:
+            fresh.append(f)
+    return fresh
+
+
+# -- CLI --------------------------------------------------------------------
+
+def _report_json(path: str, findings, new, suppressed, errors, root) -> None:
+    by_checker = collections.Counter(f.checker for f in findings)
+    doc = {
+        "version": BASELINE_VERSION,
+        "root": root,
+        "counts": dict(sorted(by_checker.items())),
+        "n_findings": len(findings),
+        "n_new": len(new),
+        "n_suppressed": len(suppressed),
+        "errors": errors,
+        "findings": [f.to_json() for f in findings],
+        "new": [f.key() for f in new],
+        "suppressed": [f.to_json() for f in suppressed],
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant linter: sync/retrace/donation/"
+                    "concurrency/determinism contracts")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to scan (default: <root>/src/repro)")
+    ap.add_argument("--root", default=None,
+                    help="repo root for relative paths + default baseline "
+                         "(default: auto-detected from the package)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: <root>/{BASELINE_NAME})")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit 1 if any finding is not in the baseline")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on ANY finding, baseline ignored")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable findings report here")
+    ap.add_argument("--quiet", action="store_true",
+                    help="summary only, no per-finding output")
+    ap.add_argument("--list", action="store_true",
+                    help="list checker ids and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for cid, fn in ALL_CHECKERS.items():
+            doc = (sys.modules[fn.__module__].__doc__ or "").strip()
+            print(f"{cid}: {doc.splitlines()[0]}")
+        return 0
+
+    root = os.path.abspath(args.root) if args.root else _default_root()
+    paths = args.paths or [os.path.join(root, "src", "repro")]
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        print(f"error: no such path(s): {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+    baseline_path = args.baseline or os.path.join(root, BASELINE_NAME)
+
+    findings, suppressed, errors = analyze_paths(paths, root=root)
+    try:
+        baseline = load_baseline(baseline_path)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    fresh = new_findings(findings, baseline)
+
+    if args.write_baseline:
+        with open(baseline_path, "w", encoding="utf-8") as f:
+            json.dump(make_baseline(findings), f, indent=1)
+            f.write("\n")
+        print(f"[analysis] baseline written: {len(findings)} finding(s) "
+              f"-> {baseline_path}")
+        return 0
+
+    if not args.quiet:
+        for f in findings:
+            print(f.render())
+    for err in errors:
+        print(f"parse error: {err}", file=sys.stderr)
+    by_checker = collections.Counter(f.checker for f in findings)
+    summary = ", ".join(f"{c}={n}" for c, n in sorted(by_checker.items())) \
+        or "none"
+    print(f"[analysis] {len(findings)} finding(s) ({summary}); "
+          f"{len(fresh)} new vs baseline; {len(suppressed)} "
+          f"pragma-suppressed; {len(errors)} parse error(s)")
+    if args.json:
+        _report_json(args.json, findings, fresh, suppressed, errors, root)
+
+    if errors:
+        return 1
+    if args.strict and findings:
+        return 1
+    if args.fail_on_new and fresh:
+        print(f"[analysis] FAIL: {len(fresh)} finding(s) not in the "
+              f"baseline ({baseline_path}):")
+        for f in fresh:
+            print("  " + f.render().replace("\n", "\n  "))
+        print("[analysis] fix the site, annotate a deliberate one with "
+              "`# repro: allow[<checker>]`, or (for accepted debt) "
+              "rerun with --write-baseline")
+        return 1
+    return 0

@@ -134,11 +134,13 @@ def make_sketch(tree, k: int, seed: int = 0) -> Sketch:
         cand = np.flatnonzero(headroom > 0)
         take = cand[np.argsort(-headroom[cand], kind="stable")][:deficit]
         alloc[take] += 1
+        # host numpy allocation bookkeeping, no device value
+        # repro: allow[host-sync]
         deficit = target - int(alloc.sum())
     assert int(alloc.sum()) == target, (int(alloc.sum()), target)
     idxs = []
     for leaf, size, a in zip(leaves, sizes, alloc):
-        a = int(a)
+        a = int(a)  # host numpy scalar  repro: allow[host-sync]
         if not a:
             idxs.append(None)
             continue

@@ -49,7 +49,7 @@ def greedy_order(zs: np.ndarray, center: bool = True) -> np.ndarray:
         # ||s + z_j||^2 = ||s||^2 + 2 <s, z_j> + ||z_j||^2 ; ||s||^2 constant
         scores = 2.0 * (zs @ s) + np.einsum("nd,nd->n", zs, zs)
         scores[~remaining] = np.inf
-        j = int(np.argmin(scores))
+        j = int(np.argmin(scores))  # host numpy  repro: allow[host-sync]
         sigma[i] = j
         s = s + zs[j]
         remaining[j] = False
@@ -80,6 +80,8 @@ def herd_offline(zs: np.ndarray, epochs: int = 1, *, kind: str = "deterministic"
     for ep in range(epochs):
         key, sub = jax.random.split(key)
         signs, _ = balance_sequence(jnp.asarray(zs_c[sigma]), kind=kind, c=c, key=sub)
+        # offline herding: one sign fetch per pass IS the dataflow (host
+        # reorder between device balance passes)  repro: allow[host-sync]
         sigma = reorder_from_signs(sigma, np.asarray(signs))
     return sigma
 

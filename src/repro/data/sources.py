@@ -29,6 +29,7 @@ from __future__ import annotations
 import json
 import os
 import zlib
+from collections import OrderedDict
 from typing import Dict, List
 
 import numpy as np
@@ -126,9 +127,18 @@ class MemmapShardDataset(DataSource):
     and the fix. Reads go through ``np.load(mmap_mode="r")``: nothing is
     resident until touched, fancy-indexed gathers copy only the requested
     rows, and ``read_block`` serves contiguous spans directly off the maps.
+
+    Open maps are cached per ``(shard, field)`` in an LRU bounded by
+    ``cache_size`` (default 64): a memmap costs a file descriptor and a VMA,
+    and a multi-thousand-shard corpus scanned by a long run would otherwise
+    accumulate one of each per shard until the fd limit. Eviction just drops
+    the reference — copied-out rows stay valid — and ``cache_hits`` /
+    ``cache_misses`` / ``cache_evictions`` count steady-state traffic
+    (open-time validation touches every file once and is excluded).
     """
 
-    def __init__(self, directory: str, validate: bool = True):
+    def __init__(self, directory: str, validate: bool = True,
+                 cache_size: int = 64):
         self.dir = str(directory)
         mpath = os.path.join(self.dir, MANIFEST_NAME)
         if not os.path.isfile(mpath):
@@ -163,8 +173,23 @@ class MemmapShardDataset(DataSource):
                 f"examples but its shard rows sum to {self.n} — the "
                 f"manifest was hand-edited or truncated; regenerate it "
                 f"with write_shards")
-        self._mmaps: Dict[tuple, np.ndarray] = {}
+        if int(cache_size) < 1:
+            raise ValueError(
+                f"cache_size must be >= 1, got {cache_size} — at least one "
+                f"map must stay open to serve a read")
+        self.cache_size = int(cache_size)
+        self._mmaps: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_evictions = 0
         self._check_files(validate)
+        # _check_files mapped every (shard, field) exactly once; drop those
+        # maps and zero the counters so the cache and its stats describe
+        # steady-state read traffic only (misses == evictions + live maps)
+        self._mmaps.clear()
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_evictions = 0
 
     def _check_files(self, validate_crc: bool) -> None:
         for s, shard in enumerate(self.manifest["shards"]):
@@ -201,10 +226,17 @@ class MemmapShardDataset(DataSource):
     def _map(self, shard: int, field: str) -> np.ndarray:
         key = (shard, field)
         mm = self._mmaps.get(key)
-        if mm is None:
-            fname = self.manifest["shards"][shard]["files"][field]["file"]
-            mm = np.load(os.path.join(self.dir, fname), mmap_mode="r")
-            self._mmaps[key] = mm
+        if mm is not None:
+            self.cache_hits += 1
+            self._mmaps.move_to_end(key)
+            return mm
+        self.cache_misses += 1
+        fname = self.manifest["shards"][shard]["files"][field]["file"]
+        mm = np.load(os.path.join(self.dir, fname), mmap_mode="r")
+        self._mmaps[key] = mm
+        while len(self._mmaps) > self.cache_size:
+            self._mmaps.popitem(last=False)
+            self.cache_evictions += 1
         return mm
 
     def __len__(self) -> int:

@@ -62,7 +62,7 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
             print(f"[dryrun] {arch} x {shape_name}: {reason}")
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     from repro.launch.mesh import data_axes
     from repro.models.act_sharding import set_activation_specs
     set_activation_specs(data_axes(mesh), model_size=mesh.shape.get("model", 0))
@@ -78,7 +78,7 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
         from jax.sharding import NamedSharding, PartitionSpec
 
         def compile_candidate(cand):
-            t_start = time.time()
+            t_start = time.perf_counter()
             step_fn, abs_args, in_shardings, donate, meta = make_cell(
                 arch, shape_name, mesh, policy, cd_constraints=cand, **kw)
             shardings = jax.tree.map(
@@ -88,9 +88,9 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
                 jitted = jax.jit(step_fn, in_shardings=shardings,
                                  donate_argnums=donate)
                 lowered = jitted.lower(*abs_args)
-                t_lower = time.time() - t_start
+                t_lower = time.perf_counter() - t_start
                 compiled = lowered.compile()
-                t_compile = time.time() - t_start - t_lower
+                t_compile = time.perf_counter() - t_start - t_lower
             hlo = compiled.as_text()
             fp = None
             if meta.get("cd_grab"):
@@ -267,7 +267,7 @@ def run_cell(arch: str, shape_name: str, mesh, policy=None, verbose=True,
                    traceback=traceback.format_exc()[-2000:])
         if verbose:
             print(f"[dryrun] {arch} x {shape_name} FAIL: {rec['reason'][:300]}")
-    rec["elapsed_s"] = round(time.time() - t0, 1)
+    rec["elapsed_s"] = round(time.perf_counter() - t0, 1)
     return rec
 
 

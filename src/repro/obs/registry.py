@@ -229,6 +229,8 @@ class MetricsRegistry:
 
     # -- record emission ---------------------------------------------------
     def emit(self, kind: str, **fields) -> dict:
+        # time_unix is a deliberate wall-clock *timestamp* (cross-run record
+        # alignment), never a duration  repro: allow[determinism]
         rec = make_record(kind, time.time(), self._seq, **fields)
         self._seq += 1
         if self.sink is not None:

@@ -46,13 +46,23 @@ def build_decode_step(cfg: ModelConfig) -> Callable:
 class ServeEngine:
     """Minimal batched greedy-decoding engine over the jit'd steps.
 
+    The decode loop is **dispatch-asynchronous**, mirroring the training
+    loop's contract: each step feeds the device-resident token straight
+    back into the next jit'd decode, generated tokens accumulate on the
+    device, and the whole sequence comes to the host in ONE batched
+    ``jax.device_get`` after the last step (the serve token-sync
+    chokepoint). The old per-token ``np.asarray`` blocked dispatch once
+    per generated token — the step-path sync bug class the invariant
+    linter (``repro.analysis``) flags.
+
     Latency telemetry (``repro.obs``) is always on and costs two
-    ``perf_counter`` reads per phase: ``serve.prefill`` times the prefill +
-    first-token sync, ``serve.decode`` times each subsequent token (the
-    per-token host sync the greedy loop already performs). Streaming
-    p50/p95/p99 accumulate across ``generate`` calls —
-    :meth:`latency_summary` is the serve-path record the load benchmarks
-    and the run log share (schema kind ``serve``).
+    ``perf_counter`` reads per phase: ``serve.prefill`` times prefill +
+    the first-token sync (time-to-first-token stays a true latency),
+    ``serve.decode`` times each token's dispatch, and ``serve.fetch``
+    times the final batched fetch. Streaming p50/p95/p99 accumulate
+    across ``generate`` calls — :meth:`latency_summary` is the serve-path
+    record the load benchmarks and the run log share (schema kind
+    ``serve``).
     """
 
     def __init__(self, params, cfg: ModelConfig, max_len: int,
@@ -66,22 +76,32 @@ class ServeEngine:
         reg = self.metrics
         prefill_t = reg.timer("serve.prefill")
         decode_t = reg.timer("serve.decode")
+        fetch_t = reg.timer("serve.fetch")
         t0 = time.perf_counter()
         with phase("serve_prefill"):
             logits, cache = self._prefill(self.params, batch)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out = [np.asarray(tok)]           # sync: first token on host
+            # TTFT sync: one fetch per request so serve.prefill stays a
+            # true time-to-first-token latency
+            first = jax.device_get(tok)  # repro: allow[host-sync]
         prefill_t.record(time.perf_counter() - t0)
+        out = [first]
         for _ in range(n_tokens - 1):
             t0 = time.perf_counter()
             with phase("serve_decode"):
                 logits, cache = self._decode(self.params, tok, cache)
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
-                out.append(np.asarray(tok))   # sync: one token per step
+                out.append(tok)     # stays on device: fetched in one batch
             decode_t.record(time.perf_counter() - t0)
-        reg.counter("serve.tokens").inc(n_tokens * out[0].shape[0])
+        t0 = time.perf_counter()
+        with phase("serve_fetch"):
+            # the serve token-sync chokepoint: ONE batched device→host
+            # transfer for the whole generated sequence
+            toks = jax.device_get(out)  # repro: allow[host-sync]
+        fetch_t.record(time.perf_counter() - t0)
+        reg.counter("serve.tokens").inc(n_tokens * toks[0].shape[0])
         reg.counter("serve.requests").inc()
-        return np.stack(out, axis=1)
+        return np.stack(toks, axis=1)
 
     def latency_summary(self) -> dict:
         """Cumulative prefill/decode latency quantiles (p50/p95/p99 seconds)

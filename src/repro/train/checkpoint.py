@@ -94,6 +94,8 @@ def list_checkpoints(directory: str):
     for name in os.listdir(directory):
         m = re.fullmatch(r"step_(\d+)", name)
         if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
+            # regex match on checkpoint dir names — host strings
+            # repro: allow[host-sync]
             out.append((int(m.group(1)), os.path.join(directory, name)))
     return sorted(out)
 

@@ -306,7 +306,7 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
                 # legacy host-synchronous dispatch: block on the loss and the
                 # step's signs right here (the per-step sync the async loop
                 # exists to avoid; ordering still consumes the device buffer)
-                np.asarray(metrics["signs"])
+                np.asarray(metrics["signs"])  # repro: allow[host-sync]
                 loss = flush_losses()
             elif loop_cfg.log_every and step_i % loop_cfg.log_every == 0:
                 loss = flush_losses()
@@ -332,6 +332,8 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
         # and roll the GraB means
         if use_grab:
             with phase("epoch_reorder", reg):
+                # THE sanctioned sign chokepoint: one fetch per epoch
+                # repro: allow[host-sync]
                 raw_signs = jax.device_get(state.signs)
                 policy.apply_epoch_signs(epoch, raw_signs)
                 state = state._replace(grab=epoch_end_fn(state.grab))
@@ -349,6 +351,7 @@ def run_training(loss_fn: Callable, params, optimizer, lr_schedule, dataset,
             hooks(epoch, state, history)
         dt = time.perf_counter() - t0
         ep_losses = [h["loss"] for h in history if h["epoch"] == epoch]
+        # host floats from flush_losses, no device value  repro: allow[host-sync]
         mean_loss = float(np.mean(ep_losses)) if ep_losses else None
         reg.emit("epoch", epoch=epoch, duration_s=dt, mean_loss=mean_loss,
                  **reg.summary())

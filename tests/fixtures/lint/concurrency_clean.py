@@ -1,0 +1,37 @@
+"""Lint fixture: queue/thread patterns the concurrency checker must NOT
+flag — the shapes data/prefetch.py actually uses."""
+import queue
+import threading
+
+
+def polled_get(q, producer):
+    while True:
+        try:
+            return q.get(timeout=0.5)
+        except queue.Empty:
+            if not producer.is_alive():
+                raise RuntimeError("producer died with the queue empty")
+
+
+def bounded_put(out_q, item, shutdown):
+    while not shutdown.is_set():
+        try:
+            out_q.put(item, timeout=0.5)
+            return True
+        except queue.Full:
+            continue
+    return False
+
+
+def unbounded_put_in_scope(item):
+    log_q = queue.Queue()       # no maxsize: put can never block
+    log_q.put(item)
+    return log_q
+
+
+def supervised_worker(work):
+    shutdown = threading.Event()
+    t = threading.Thread(target=work, args=(shutdown,), daemon=True)
+    t.start()
+    shutdown.set()
+    t.join()

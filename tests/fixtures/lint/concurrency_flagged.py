@@ -1,0 +1,28 @@
+"""Lint fixture: concurrency violations — hangs, deadlocks, races."""
+import queue
+import threading
+
+
+def bare_get(q):
+    return q.get()              # flagged: hangs if the producer died
+
+
+def bare_put(out_q, item):
+    out_q.put(item)             # flagged: bounded queue + full buffer = hang
+
+
+def fire_and_forget(work):
+    t = threading.Thread(target=work, daemon=True)   # flagged: no Event/join
+    t.start()
+    return t
+
+
+def racy_result(in_q):
+    result = None
+
+    def worker():
+        nonlocal result         # flagged: cross-thread closure write
+        result = in_q.get(timeout=1.0)
+
+    threading.Thread(target=worker).start()          # flagged: no Event/join
+    return result

@@ -1,0 +1,18 @@
+"""Lint fixture: clocks/RNG the determinism checker must NOT flag."""
+import time
+
+import numpy as np
+
+
+def monotonic_duration():
+    t0 = time.perf_counter()
+    return time.perf_counter() - t0
+
+
+def counter_keyed_rng(seed, epoch, n):
+    rng = np.random.default_rng((seed, epoch))
+    return rng.permutation(n)
+
+
+def seed_sequence(seed):
+    return np.random.SeedSequence(seed).spawn(2)

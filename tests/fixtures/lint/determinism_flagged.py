@@ -1,0 +1,19 @@
+"""Lint fixture: determinism violations — wall clocks and global RNG."""
+import random
+import time
+
+import numpy as np
+
+
+def wallclock_duration():
+    t0 = time.time()            # flagged: NTP can step mid-measurement
+    return time.time() - t0     # flagged
+
+
+def legacy_global_rng(n):
+    np.random.seed(0)           # flagged: hidden global state
+    return np.random.permutation(n)     # flagged
+
+
+def stdlib_rng():
+    return random.random()      # flagged: process-global RNG

@@ -1,0 +1,17 @@
+"""Lint fixture: pytree construction the donation checker must NOT flag."""
+import jax.numpy as jnp
+
+
+def fresh_allocation_per_leaf(d, State):
+    return State(s=jnp.zeros((d,)), m_prev=jnp.zeros((d,)),
+                 m_acc=jnp.zeros((d,)))
+
+
+def shared_non_array_value(cfg, State):
+    name = cfg.name             # not an array local: sharing is fine
+    return State(a=name, b=name)
+
+
+def array_used_once_per_container(d, State):
+    z = jnp.zeros((d,))
+    return State(s=z, m_prev=jnp.zeros_like(z))

@@ -1,0 +1,12 @@
+"""Lint fixture: donation-alias violations — one buffer, many leaves."""
+import jax.numpy as jnp
+
+
+def aliased_constructor(d, State):
+    z = jnp.zeros((d,), jnp.float32)
+    return State(s=z, m_prev=z, m_acc=z)    # flagged: z donated thrice
+
+
+def aliased_dict_literal(d):
+    buf = jnp.zeros((d,))
+    return {"prev": buf, "acc": buf}        # flagged: same leaf twice

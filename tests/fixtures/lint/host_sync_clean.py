@@ -1,0 +1,28 @@
+"""Lint fixture: sync-adjacent code the host-sync checker must NOT flag."""
+import jax
+import numpy as np
+
+
+def metadata_in_loop(xs):
+    # .size / .shape[i] / len() are host attributes of the array object —
+    # reading them never transfers
+    total = 0
+    for x in xs:
+        total += int(x.size) + int(x.shape[0]) + len(x.shape)
+    return total
+
+
+def cast_outside_loop(host_scalar):
+    return float(host_scalar)
+
+
+def device_values_stay_on_device(pending, x):
+    out = []
+    for _ in range(4):
+        x = x * 2
+        out.append(x)           # accumulate; the batched fetch happens
+    return out                  # elsewhere, at a sanctioned chokepoint
+
+
+def cast_of_literal(n):
+    return [np.arange(n) for _ in range(2)]     # arange is not a cast

@@ -1,0 +1,27 @@
+"""Lint fixture: every host-sync violation shape. Never imported."""
+import jax
+import numpy as np
+
+
+def explicit_sync(x):
+    return jax.device_get(x)            # flagged: sync outside chokepoints
+
+
+def explicit_block(x):
+    return jax.block_until_ready(x)     # flagged: sync by definition
+
+
+def scalar_item(x):
+    return x.item()                     # flagged: scalar sync
+
+
+def per_step_cast(batches, step):
+    losses = []
+    for b in batches:
+        _, metrics = step(b)
+        losses.append(float(metrics["loss"]))   # flagged: cast per iteration
+    return losses
+
+
+def np_cast_in_comprehension(xs):
+    return [np.asarray(x) for x in xs]  # flagged: comprehensions are loops

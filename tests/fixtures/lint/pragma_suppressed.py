@@ -1,0 +1,24 @@
+"""Lint fixture: pragma coverage — same-line, line-above, wildcard, and a
+wrong-checker pragma that must NOT suppress."""
+import time
+
+import jax
+
+
+def sanctioned_batched_sync(pending):
+    # same-line pragma, prose before it
+    return jax.device_get(pending)  # one batched fetch  repro: allow[host-sync]
+
+
+def record_timestamp():
+    # wall-clock timestamp for record alignment, never a duration
+    # repro: allow[determinism]
+    return time.time()
+
+
+def wildcard_pragma(x):
+    return x.item()  # repro: allow[*]
+
+
+def wrong_checker_pragma(x):
+    return jax.device_get(x)  # repro: allow[determinism]

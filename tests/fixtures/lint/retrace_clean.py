@@ -1,0 +1,18 @@
+"""Lint fixture: jit usage the retrace checker must NOT flag."""
+import jax
+
+
+def build_once_reuse_in_loop(step, n):
+    f = jax.jit(step, static_argnums=(0,), donate_argnums=(1,))
+    out = []
+    for i in range(n):
+        out.append(f(i))        # calling a prebuilt jit in a loop is fine
+    return out
+
+
+def helper_called_from_loop(steps):
+    def make(s):
+        # the jit build sits in make's own scope, not lexically inside a
+        # loop — make may well be called once; the checker is scope-bounded
+        return jax.jit(s)
+    return [make(s) for s in steps]

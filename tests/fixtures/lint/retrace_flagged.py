@@ -1,0 +1,20 @@
+"""Lint fixture: retrace violations — jit built per iteration, mutable
+static args."""
+import functools
+
+import jax
+
+
+def per_epoch_rebuild(epochs, step):
+    for _ in range(epochs):
+        f = jax.jit(step)       # flagged: fresh trace every iteration
+        f()
+
+
+def partial_jit_in_comprehension(fns):
+    return [functools.partial(jax.jit, donate_argnums=(0,))(f)  # flagged
+            for f in fns]
+
+
+def unhashable_static(fn):
+    return jax.jit(fn, static_argnums=[0, 1])   # flagged: list literal

@@ -109,6 +109,51 @@ def test_wrong_format_version_is_actionable(tmp_path):
         MemmapShardDataset(d)
 
 
+def test_mmap_cache_never_exceeds_cap(tmp_path):
+    """A bounded LRU serves a many-shard corpus without holding a map (an fd
+    + a VMA) open per shard: the live cache stays <= cache_size at every
+    point of a full scan, evictions happen, and the data is bit-identical to
+    an unbounded reader's."""
+    src, d = _make(tmp_path, n=64, shard=4)               # 16 shards x 2 fields
+    ds = MemmapShardDataset(d, cache_size=4)
+    ref = MemmapShardDataset(d, cache_size=1024)          # effectively unbounded
+    assert len(ds._mmaps) <= 4                            # post-validation too
+    rng = np.random.default_rng(1)
+    for _ in range(6):                                    # random cross-shard scans
+        idx = rng.permutation(64)[:23]
+        got, want = ds.batch(idx), ref.batch(idx)
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k])
+        assert len(ds._mmaps) <= 4
+    blk = ds.read_block(3, 61)                            # sequential path too
+    np.testing.assert_array_equal(blk["tokens"],
+                                  ref.read_block(3, 61)["tokens"])
+    assert len(ds._mmaps) <= 4
+    assert ds.cache_evictions > 0
+    assert ds.cache_misses == ds.cache_evictions + len(ds._mmaps)
+    assert ref.cache_evictions == 0                       # cap never hit
+    assert len(ref._mmaps) == 32                          # 16 shards x 2 fields
+
+
+def test_mmap_cache_counts_steady_state_hits(tmp_path):
+    """Open-time validation maps every file once but is excluded from the
+    stats; repeated reads of one shard are hits after the first miss."""
+    _, d = _make(tmp_path, n=32, shard=10)
+    ds = MemmapShardDataset(d)
+    assert (ds.cache_hits, ds.cache_misses, ds.cache_evictions) == (0, 0, 0)
+    idx = np.arange(0, 5)
+    ds.batch(idx)
+    assert ds.cache_misses == 2                           # tokens + labels, shard 0
+    ds.batch(idx)
+    assert ds.cache_misses == 2 and ds.cache_hits == 2
+
+
+def test_mmap_cache_size_must_be_positive(tmp_path):
+    _, d = _make(tmp_path)
+    with pytest.raises(ValueError, match="cache_size"):
+        MemmapShardDataset(d, cache_size=0)
+
+
 def test_write_shards_generic_float_source(tmp_path):
     """Any row-wise dict source shards, not just token corpora."""
     rng = np.random.default_rng(3)

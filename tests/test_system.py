@@ -102,3 +102,26 @@ def test_serve_engine_generates():
     out = eng.generate({"tokens": toks}, n_tokens=5)
     assert out.shape == (2, 5)
     assert (out >= 0).all() and (out < cfg.vocab).all()  # pad never decoded
+
+
+def test_serve_engine_batches_token_fetch(monkeypatch):
+    """Dispatch-async serving: generate() does exactly TWO device→host
+    transfers regardless of n_tokens — the TTFT sync after prefill and one
+    batched fetch of the whole sequence after the last decode step (the old
+    per-token np.asarray synced once per generated token)."""
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import ServeEngine
+    _, cfg = get_config("qwen2-7b")
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, max_len=32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    real, fetches = jax.device_get, []
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: (fetches.append(1), real(x))[1])
+    out = eng.generate({"tokens": toks}, n_tokens=8)
+    assert out.shape == (2, 8)
+    assert len(fetches) == 2                  # was 1 + n_tokens before
+    summ = eng.latency_summary()
+    assert summ["timers"]["serve.fetch"]["count"] == 1
+    assert summ["counters"]["serve.tokens"] == 16.0
